@@ -1,0 +1,90 @@
+"""Shared benchmark plumbing: calibration sets, timing, CSV rows.
+
+Every benchmark reproduces one paper table/figure on this machine's real
+device (the CPU host plays the role of one of the paper's five GPUs —
+the *methodology* is device-blind, which is the paper's point).  Rows are
+``name,us_per_call,derived`` where ``derived`` carries the model
+prediction (µs) or the derived summary statistic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, List, Sequence
+
+from repro.core.calibrate import FitResult, fit_model, \
+    geometric_mean_relative_error
+from repro.core.model import Model
+from repro.core.uipick import (
+    ALL_GENERATORS,
+    KernelCollection,
+    MatchCondition,
+    MeasurementKernel,
+    gather_feature_values,
+)
+
+TRIALS = int(os.environ.get("BENCH_TRIALS", "8"))
+
+COLLECTION = KernelCollection(ALL_GENERATORS)
+
+# The shared cost-explanatory model (paper §8.1 linear form, CPU-host
+# features): madd + contiguous/strided/gather memory + launch overhead.
+BASE_MODEL_EXPR = (
+    "p_madd * f_op_float32_madd "
+    "+ p_alu * (f_op_float32_add + f_op_float32_mul + f_op_float32_cmp) "
+    "+ p_mem * (f_mem_contig_float32_load + f_mem_contig_float32_store) "
+    "+ p_strided * (f_mem_strided_float32_load + f_mem_strided_float32_store) "
+    "+ p_gather * f_mem_gather_float32_load "
+    "+ p_concat * f_mem_concat_float32_store "
+    "+ p_launch * f_sync_launch_kernel"
+)
+
+CAL_TAGS = [
+    "flops_madd_pattern", "flops_dot_pattern", "mem_stream", "empty_kernel",
+    "dtype:float32",
+    "nelements:65536,1048576,4194304,16777216",
+    "iters:64,256,512",
+    "n_dot:128,256,384",
+    "n_arrays:1,2,4",
+]
+
+
+def linear_model() -> Model:
+    return Model("f_wall_time_cpu_host", BASE_MODEL_EXPR)
+
+
+@functools.lru_cache(maxsize=1)
+def calibrated_base_model():
+    """Calibrate the shared microbenchmark model once per process."""
+    model = linear_model()
+    knls = COLLECTION.generate_kernels(
+        CAL_TAGS, generator_match_cond=MatchCondition.INTERSECT)
+    rows = gather_feature_values(model.all_features(), knls, trials=TRIALS)
+    fit = fit_model(model, rows, nonneg=True)
+    return model, fit
+
+
+def predict(model: Model, fit: FitResult, k: MeasurementKernel) -> float:
+    return float(model.evaluate(fit.params, k.counts()))
+
+
+def evaluate_kernels(model: Model, fit: FitResult,
+                     kernels: Sequence[MeasurementKernel],
+                     prefix: str) -> List[str]:
+    """Measure + predict each kernel; emit CSV rows and a gmre summary."""
+    rows, preds, meas = [], [], []
+    for k in kernels:
+        t = k.time(trials=TRIALS)
+        p = predict(model, fit, k)
+        preds.append(p)
+        meas.append(t)
+        rows.append(f"{prefix}.{k.name},{t * 1e6:.2f},{p * 1e6:.2f}")
+    gmre = geometric_mean_relative_error(preds, meas)
+    rows.append(f"{prefix}.gmre_percent,{gmre * 100:.2f},")
+    # ranking correctness: did the model order the variants right?
+    order_pred = sorted(range(len(kernels)), key=lambda i: preds[i])
+    order_meas = sorted(range(len(kernels)), key=lambda i: meas[i])
+    rows.append(
+        f"{prefix}.top1_rank_correct,"
+        f"{int(order_pred[0] == order_meas[0])},")
+    return rows

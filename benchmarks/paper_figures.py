@@ -1,0 +1,125 @@
+"""One benchmark per paper table/figure (§2, §7.4, §8.3–8.5, Table 3).
+
+Each function returns CSV rows ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import (
+    COLLECTION,
+    TRIALS,
+    calibrated_base_model,
+    evaluate_kernels,
+    linear_model,
+    predict,
+)
+from repro.core.calibrate import fit_model, geometric_mean_relative_error
+from repro.core.model import Model
+from repro.core.uipick import MatchCondition, gather_feature_values
+
+
+def fig1_matmul_simple() -> List[str]:
+    """§2 Fig 1: one-parameter madd model, calibrated on the *same*
+    matmul variant at other sizes — maximal accuracy, minimal scope."""
+    model = Model("f_wall_time_cpu_host",
+                  "p_madd * f_op_float32_madd + p_launch * f_sync_launch_kernel")
+    # calibration sizes bracket the prediction sizes: on a CPU host the
+    # effective madd rate varies with the cache-residency regime, so the
+    # single-parameter model is valid within, not across, regimes (§4's
+    # machine-utilization validity assumption, observed in practice)
+    cal = COLLECTION.generate_kernels(
+        ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
+         "n:256,384,640,1024"])
+    rows = gather_feature_values(model.all_features(), cal, trials=TRIALS)
+    fit = fit_model(model, rows, nonneg=True)
+    test = COLLECTION.generate_kernels(
+        ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
+         "n:512,768"])
+    return evaluate_kernels(model, fit, test, "fig1")
+
+
+def fig2_madd_component() -> List[str]:
+    """§2 Fig 2: calibrate p_madd on peak-FLOP microbenchmarks instead;
+    the model now *attributes* the madd component of matmul time."""
+    model = Model("f_wall_time_cpu_host",
+                  "p_madd * f_op_float32_madd + p_launch * f_sync_launch_kernel")
+    cal = COLLECTION.generate_kernels(
+        ["flops_madd_pattern", "dtype:float32",
+         "nelements:65536", "iters:64,128,256,512"])
+    rows = gather_feature_values(model.all_features(), cal, trials=TRIALS)
+    fit = fit_model(model, rows, nonneg=True)
+    test = COLLECTION.generate_kernels(
+        ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
+         "n:512,768"])
+    out = []
+    for k in test:
+        t = k.time(trials=TRIALS)
+        frac = predict(model, fit, k) / t
+        out.append(f"fig2.{k.name},{t * 1e6:.2f},{frac:.3f}")
+    out.append("fig2.note_derived_is_madd_fraction,0,")
+    return out
+
+
+def fig5_overlap() -> List[str]:
+    """§7.4 Fig 5: vary the on-chip/global ratio m; fit the nonlinear
+    overlapped model t ≈ ovl(c_gmem, c_onchip)."""
+    model = Model(
+        "f_wall_time_cpu_host",
+        "overlap2(p_g * (f_mem_contig_float32_load + f_op_float32_add), "
+        "p_c * (f_op_float32_mul + f_op_float32_add), p_edge) "
+        "+ p_launch * f_sync_launch_kernel")
+    knls = COLLECTION.generate_kernels(
+        ["overlap_pattern", "dtype:float32", "nelements:16777216",
+         "m:0,16,256,1024,4096,16384,65536"])
+    rows = gather_feature_values(model.all_features(), knls, trials=TRIALS)
+    fit = fit_model(model, rows)
+    out, preds, meas = [], [], []
+    for k, r in zip(knls, rows):
+        p = predict(model, fit, k)
+        preds.append(p)
+        meas.append(r["f_wall_time_cpu_host"])
+        out.append(f"fig5.m{k.tags['m']},{meas[-1] * 1e6:.2f},{p * 1e6:.2f}")
+    out.append(f"fig5.gmre_percent,"
+               f"{geometric_mean_relative_error(preds, meas) * 100:.2f},")
+    out.append(f"fig5.p_edge,{fit.params.get('p_edge', 0):.3e},")
+    return out
+
+
+def fig7_matmul_variants() -> List[str]:
+    """§8.3: two matmul variants (tiled-staged vs naive) predicted from a
+    microbenchmark-calibrated model the variants never calibrated on."""
+    model, fit = calibrated_base_model()
+    test = COLLECTION.generate_kernels(
+        ["matmul_sq", "dtype:float32", "tile:64", "n:512,768"])
+    return evaluate_kernels(model, fit, test, "fig7")
+
+
+def fig8_dg_variants() -> List[str]:
+    """§8.4: four DG differentiation variants across sizes."""
+    model, fit = calibrated_base_model()
+    test = COLLECTION.generate_kernels(
+        ["dg_diff", "dtype:float32", "nelements_dg:16384,65536"])
+    return evaluate_kernels(model, fit, test, "fig8")
+
+
+def fig9_stencil_variants() -> List[str]:
+    """§8.5: two five-point stencil variants (roll vs slice lowering)."""
+    model, fit = calibrated_base_model()
+    test = COLLECTION.generate_kernels(
+        ["finite_diff", "dtype:float32", "n_grid:2048,4096"])
+    return evaluate_kernels(model, fit, test, "fig9")
+
+
+def table3_parameters() -> List[str]:
+    """Table 3 analogue: calibrated per-feature costs + implied rates."""
+    model, fit = calibrated_base_model()
+    out = []
+    for name, val in sorted(fit.params.items()):
+        rate = (1.0 / val) if val > 0 else float("inf")
+        out.append(f"table3.{name},{val * 1e6:.6g},{rate:.4g}")
+    out.append(f"table3.residual_norm,{fit.residual_norm:.4g},")
+    out.append(f"table3.converged,{int(fit.converged)},")
+    return out

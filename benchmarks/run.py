@@ -1,0 +1,51 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+  PYTHONPATH=src python -m benchmarks.run            # all benches
+  PYTHONPATH=src python -m benchmarks.run fig7 fig9  # subset
+
+Benches (one per paper table/figure):
+  fig1    §2 Fig 1  — simple same-variant madd model
+  fig2    §2 Fig 2  — madd-component attribution
+  fig5    §7.4 Fig 5 — nonlinear overlap model across m sweep
+  fig7    §8.3 Fig 7 — matmul variants (tiled vs naive)
+  fig8    §8.4 Fig 8 — four DG differentiation variants
+  fig9    §8.5 Fig 9 — two stencil variants
+  table3  Table 3    — calibrated parameter values / implied rates
+  roofline deliverable g — three-term roofline per (arch × shape)
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import paper_figures as pf
+    from benchmarks.roofline_bench import roofline_rows
+
+    benches = {
+        "fig1": pf.fig1_matmul_simple,
+        "fig2": pf.fig2_madd_component,
+        "fig5": pf.fig5_overlap,
+        "fig7": pf.fig7_matmul_variants,
+        "fig8": pf.fig8_dg_variants,
+        "fig9": pf.fig9_stencil_variants,
+        "table3": pf.table3_parameters,
+        "roofline": roofline_rows,
+    }
+    only = set(sys.argv[1:]) or set(benches)
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001 — a bench failure is a row
+            print(f"{name}.FAILED,0,{type(e).__name__}:{str(e)[:60]}")
+        print(f"{name}.bench_wall_s,{(time.time() - t0) * 1e6:.0f},",
+              flush=True)
+
+
+if __name__ == '__main__':
+    main()

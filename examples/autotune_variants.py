@@ -1,0 +1,50 @@
+"""Autotuner pruning — the paper's headline use case (§4).
+
+Calibrate the cost model ONCE on generic microbenchmarks, then rank
+mathematically-equivalent program variants *without running them*:
+
+  * 4 DG differentiation variants (paper §8.4)
+  * 2 stencil lowerings (paper §8.5)
+  * matmul tiled-vs-naive at two block sizes (paper §8.3)
+
+Finally measure everything to score the model's ranking quality.
+
+  PYTHONPATH=src python examples/autotune_variants.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import calibrated_base_model
+from repro.core.uipick import ALL_GENERATORS, KernelCollection
+from repro.core.variantselect import Variant, rank_variants, ranking_quality
+
+COLL = KernelCollection(ALL_GENERATORS)
+
+
+def show(title, tags):
+    model, fit = calibrated_base_model()
+    knls = COLL.generate_kernels(tags)
+    variants = [Variant(k.name, k.fn, k.make_args) for k in knls]
+    ranked = rank_variants(model, fit, variants, measure=True, trials=6)
+    q = ranking_quality(ranked)
+    print(f"\n== {title} ==")
+    for r in ranked:
+        print(f"  pred {r.predicted_time * 1e3:8.2f} ms   "
+              f"meas {r.measured_time * 1e3:8.2f} ms   {r.name}")
+    print(f"  top-1 correct: {bool(q['top1_correct'])}   "
+          f"pairwise agreement: {q['pairwise_agreement']:.2f}")
+
+
+def main():
+    show("DG differentiation (4 variants)",
+         ["dg_diff", "dtype:float32", "nelements_dg:32768"])
+    show("5-point stencil (2 lowerings)",
+         ["finite_diff", "dtype:float32", "n_grid:4096"])
+    show("matmul: tiled vs naive",
+         ["matmul_sq", "dtype:float32", "n:768", "tile:64"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Machine calibration — the once-per-device black-box step (paper §7).
+
+Runs the full UIPiCK microbenchmark battery on this host, calibrates the
+shared cost-explanatory model, and writes the machine profile to JSON so
+later sessions (variant selection, straggler expectations, schedulers)
+can load it without re-measuring.
+
+  PYTHONPATH=src python examples/calibrate_machine.py --out machine.json
+"""
+import argparse
+import json
+import platform
+
+from benchmarks.common import BASE_MODEL_EXPR, CAL_TAGS, TRIALS
+from repro.core.calibrate import fit_model
+from repro.core.model import Model
+from repro.core.uipick import (
+    ALL_GENERATORS,
+    KernelCollection,
+    MatchCondition,
+    gather_feature_values,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="machine_profile.json")
+    ap.add_argument("--trials", type=int, default=TRIALS)
+    args = ap.parse_args()
+
+    model = Model("f_wall_time_cpu_host", BASE_MODEL_EXPR)
+    knls = KernelCollection(ALL_GENERATORS).generate_kernels(
+        CAL_TAGS, generator_match_cond=MatchCondition.INTERSECT)
+    print(f"running {len(knls)} measurement kernels "
+          f"({args.trials} trials each)…")
+    rows = gather_feature_values(model.all_features(), knls,
+                                 trials=args.trials)
+    fit = fit_model(model, rows, nonneg=True)
+    profile = {
+        "machine": platform.processor() or platform.machine(),
+        "model_expr": BASE_MODEL_EXPR,
+        "params": fit.params,
+        "residual_norm": fit.residual_norm,
+        "converged": fit.converged,
+        "n_measurement_kernels": len(knls),
+    }
+    with open(args.out, "w") as f:
+        json.dump(profile, f, indent=2)
+    print(json.dumps(profile, indent=2))
+    print(f"\nwritten to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Elastic scaling + fault tolerance demo.
+
+Train on one mesh, checkpoint, inject a failure (auto-restore), then
+reshard the live state onto a different mesh and keep training — the
+single-process realization of losing/gaining pod slices.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+
+from repro.configs import get_smoke_config
+from repro.configs.base import InputShape, OptimizerConfig, RunConfig
+from repro.launch.mesh import make_mesh
+from repro.runtime import Trainer
+
+CKPT = "/tmp/repro_elastic_demo"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_smoke_config("yi-6b")
+    run = RunConfig(
+        model=cfg,
+        shape=InputShape("demo", seq_len=32, global_batch=8, kind="train"),
+        optimizer=OptimizerConfig(learning_rate=1e-3, warmup_steps=5,
+                                  total_steps=100),
+        microbatches=2, checkpoint_every=5, checkpoint_dir=CKPT,
+        max_step_retries=2,
+    )
+
+    # phase 1: train with an injected failure at step 8
+    fails = {8: True}
+    tr = Trainer(run, mesh=None, failure_hook=lambda s: fails.pop(s, False))
+    state = tr.train(tr.restore_or_init(), 12, log_every=5)
+    restored = [m for m in tr.metrics_log if m.get("event") == "restored"]
+    print(f"phase 1 done at step {state.step}; "
+          f"auto-restores: {len(restored)}")
+
+    # phase 2: elastic reshard onto an explicit (data, model) mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    state = tr.reshard(state, mesh)
+    print(f"resharded onto mesh {dict(mesh.shape)} at step {state.step}")
+    state = tr.train(state, 20, log_every=5)
+    tr.ckpt.wait()
+    losses = [m["loss"] for m in tr.metrics_log if "loss" in m]
+    print(f"phase 2 done at step {state.step}; "
+          f"loss {losses[0]:.3f} → {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

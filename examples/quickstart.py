@@ -1,0 +1,44 @@
+"""Quickstart: the paper's §2 flow in ~40 lines.
+
+1. define a cost model over automatically-counted kernel features
+2. generate measurement kernels with UIPiCK filter tags
+3. gather feature values (counts + black-box wall times)
+4. calibrate (Levenberg-Marquardt)
+5. predict execution time for an unseen kernel
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.calibrate import fit_model
+from repro.core.model import Model
+from repro.core.uipick import ALL_GENERATORS, KernelCollection, \
+    gather_feature_values
+
+# 1. the model: madd cost + launch overhead (paper eq. 1)
+model = Model(
+    "f_wall_time_cpu_host",
+    "p_f32madd * f_op_float32_madd + p_launch * f_sync_launch_kernel",
+)
+
+# 2. measurement kernels: square matmuls at four sizes (paper §2.2 tags)
+filter_tags = [
+    "matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
+    "n:256,384,640,1024",
+]
+m_knls = KernelCollection(ALL_GENERATORS).generate_kernels(filter_tags)
+print(f"measurement kernels: {[k.name for k in m_knls]}")
+
+# 3. feature values: symbolic counts + measured wall time
+rows = gather_feature_values(model.all_features(), m_knls, trials=8)
+
+# 4. calibrate
+fit = fit_model(model, rows, nonneg=True)
+print(f"calibrated: {fit.params}  (residual {fit.residual_norm:.3g})")
+print(f"implied madd rate: {1.0 / fit.params['p_f32madd']:.3e} madd/s")
+
+# 5. predict an unseen size and check
+(test,) = KernelCollection(ALL_GENERATORS).generate_kernels(
+    ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16", "n:768"])
+pred = float(model.evaluate(fit.params, test.counts()))
+meas = test.time(trials=8)
+print(f"n=768:  predicted {pred * 1e3:.2f} ms   measured {meas * 1e3:.2f} ms "
+      f"  rel.err {abs(pred - meas) / meas * 100:.1f}%")

@@ -1,0 +1,14 @@
+"""Core: the paper's contribution as a composable JAX subsystem.
+
+* ``features`` / ``counting``  — automatic, symbolic kernel-feature extraction
+  (the polyhedral counting of the paper, re-based onto jaxprs + HLO)
+* ``model`` / ``overlap``      — Perflex-style cost-model expressions,
+  including the differentiable-step overlap model
+* ``calibrate``                — black-box calibration (Levenberg-Marquardt)
+* ``uipick``                   — tag-filtered measurement-kernel generators
+* ``workremoval``              — the work-removal jaxpr transformation
+* ``hlo`` / ``roofline``       — trip-count-aware compiled-HLO cost walking
+  and the three-term roofline report
+* ``variantselect``            — model-guided variant ranking (the paper's
+  autotuner-pruning use case)
+"""

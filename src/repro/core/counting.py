@@ -1,0 +1,271 @@
+"""Automatic kernel-statistics gathering from jaxprs (paper §5, Algorithm 1).
+
+The paper walks a polyhedral program representation, counting per-statement
+operations × statement trip counts.  The JAX analogue walks a
+``ClosedJaxpr``: equations inside ``scan``/``while`` bodies are multiplied
+by the (statically known) trip count, ``cond`` branches are averaged
+(matching the paper's divergent-control-flow cost accounting), and
+``pjit``/``remat`` calls are inlined.
+
+Counted feature classes (the TPU translation of the paper's features):
+  * arithmetic  — by (op-kind, dtype); ``dot_general`` is counted as *madd*
+    sequences (the MXU's fused multiply-add), exactly the paper's
+    ``f_op_<dtype>_madd``
+  * memory      — element traffic by access class: ``contig`` (last-dim
+    contiguous, lane-friendly), ``strided`` (transpose/reorder),
+    ``gather``/``scatter`` (irregular).  On GPU the paper keys cost on
+    lid-strides; on TPU the analogous cost driver is (sublane, lane)
+    layout friendliness.
+  * collective  — payload bytes by collective kind (psum, all_gather, ...)
+  * sync        — program launches, loop steps
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.symbolic import ParametricCount, Poly, interpolate_polynomial
+
+
+# ---------------------------------------------------------------------------
+# Feature-count container
+# ---------------------------------------------------------------------------
+
+
+class FeatureCounts(dict):
+    """Mapping feature-id → count (float).  Missing keys read as 0."""
+
+    def __missing__(self, key):
+        return 0.0
+
+    def add(self, key: str, value: float):
+        self[key] = self.get(key, 0.0) + float(value)
+
+    def merged(self, other: "FeatureCounts", mult: float = 1.0
+               ) -> "FeatureCounts":
+        out = FeatureCounts(self)
+        for k, v in other.items():
+            out.add(k, v * mult)
+        return out
+
+    def scaled(self, mult: float) -> "FeatureCounts":
+        return FeatureCounts({k: v * mult for k, v in self.items()})
+
+
+def _size(aval) -> int:
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def _dt(aval) -> str:
+    return str(aval.dtype)
+
+
+_ARITH = {
+    "add": "add", "add_any": "add", "sub": "add", "mul": "mul",
+    "div": "div", "max": "cmp", "min": "cmp", "neg": "add",
+    "exp": "transc", "log": "transc", "tanh": "transc", "logistic": "transc",
+    "rsqrt": "transc", "sqrt": "transc", "erf": "transc", "sin": "transc",
+    "cos": "transc", "pow": "transc", "integer_pow": "mul",
+    "exp2": "transc", "log1p": "transc", "expm1": "transc",
+    "cumsum": "add", "cumlogsumexp": "transc", "cummax": "cmp",
+}
+
+_MEM_GATHER = {"gather", "take", "dynamic_slice"}
+_MEM_SCATTER = {"scatter", "scatter-add", "scatter_add", "dynamic_update_slice"}
+_MEM_STRIDED = {"transpose", "rev"}
+# concatenate gets its own access class: on most hosts it materializes a
+# copy (jnp.roll lowers to it), with a distinct cost from streaming adds
+_MEM_CONCAT = {"concatenate"}
+_MEM_CONTIG = {"broadcast_in_dim", "pad", "slice", "squeeze",
+               "expand_dims", "copy", "convert_element_type", "reshape",
+               "iota", "select_n"}
+
+_COLLECTIVES = {"psum", "all_gather", "reduce_scatter", "all_to_all",
+                "ppermute", "pmax", "pmin", "psum_invariant",
+                "all_gather_invariant"}
+
+
+def _coll_name(prim: str) -> str:
+    return prim[:-10] if prim.endswith("_invariant") else prim
+
+_REDUCE = {"reduce_sum": "add", "reduce_max": "cmp", "reduce_min": "cmp",
+           "reduce_prod": "mul", "argmax": "cmp", "argmin": "cmp",
+           "reduce_and": "add", "reduce_or": "add"}
+
+
+def _count_eqn(eqn, counts: FeatureCounts, mult: float):
+    prim = eqn.primitive.name
+    out_aval = eqn.outvars[0].aval if eqn.outvars else None
+
+    if prim == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, _), _ = dims
+        lhs = eqn.invars[0].aval
+        contract = 1
+        for d in lc:
+            contract *= lhs.shape[d]
+        n_madd = _size(out_aval) * contract
+        counts.add(f"f_op_{_dt(out_aval)}_madd", n_madd * mult)
+        # operand/result element traffic, contiguous class
+        for v in eqn.invars:
+            counts.add(f"f_mem_contig_{_dt(v.aval)}_load", _size(v.aval) * mult)
+        counts.add(f"f_mem_contig_{_dt(out_aval)}_store",
+                   _size(out_aval) * mult)
+        return
+
+    if prim in _ARITH:
+        kind = _ARITH[prim]
+        counts.add(f"f_op_{_dt(out_aval)}_{kind}", _size(out_aval) * mult)
+        return
+
+    if prim in _REDUCE:
+        kind = _REDUCE[prim]
+        counts.add(f"f_op_{_dt(eqn.invars[0].aval)}_{kind}",
+                   _size(eqn.invars[0].aval) * mult)
+        return
+
+    if prim in _MEM_GATHER:
+        counts.add(f"f_mem_gather_{_dt(out_aval)}_load",
+                   _size(out_aval) * mult)
+        return
+    if prim in _MEM_SCATTER:
+        upd = eqn.invars[-1].aval
+        counts.add(f"f_mem_scatter_{_dt(upd)}_store", _size(upd) * mult)
+        return
+    if prim in _MEM_STRIDED:
+        counts.add(f"f_mem_strided_{_dt(out_aval)}_load",
+                   _size(out_aval) * mult)
+        counts.add(f"f_mem_strided_{_dt(out_aval)}_store",
+                   _size(out_aval) * mult)
+        return
+    if prim in _MEM_CONCAT:
+        counts.add(f"f_mem_concat_{_dt(out_aval)}_store",
+                   _size(out_aval) * mult)
+        return
+    if prim in _MEM_CONTIG:
+        counts.add(f"f_mem_contig_{_dt(out_aval)}_store",
+                   _size(out_aval) * mult)
+        return
+
+    if prim in _COLLECTIVES:
+        nbytes = sum(_size(v.aval) * v.aval.dtype.itemsize
+                     for v in eqn.invars)
+        counts.add(f"f_coll_{_coll_name(prim)}_bytes", nbytes * mult)
+        counts.add(f"f_coll_{_coll_name(prim)}_count", mult)
+        return
+
+    if prim in ("sort",):
+        n = _size(eqn.invars[0].aval)
+        counts.add(f"f_op_{_dt(eqn.invars[0].aval)}_cmp",
+                   n * max(np.log2(max(n, 2)), 1) * mult)
+        return
+
+    # ---- control flow: recurse ------------------------------------------
+    if prim == "scan":
+        length = eqn.params["length"]
+        inner = count_jaxpr_counts(eqn.params["jaxpr"].jaxpr)
+        for k, v in inner.items():
+            counts.add(k, v * length * mult)
+        counts.add("f_sync_loop_steps", length * mult)
+        return
+    if prim == "while":
+        inner = count_jaxpr_counts(eqn.params["body_jaxpr"].jaxpr)
+        for k, v in inner.items():  # unknown trip count: count body once
+            counts.add(k, v * mult)
+        counts.add("f_sync_loop_steps", mult)
+        return
+    if prim == "cond":
+        branches = eqn.params["branches"]
+        for br in branches:  # average — divergent-branch accounting (§4)
+            inner = count_jaxpr_counts(br.jaxpr)
+            for k, v in inner.items():
+                counts.add(k, v * mult / len(branches))
+        return
+    if prim in ("pjit", "closed_call", "core_call", "remat", "checkpoint",
+                "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
+                "shard_map"):
+        sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+        if sub is not None:
+            jx = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            inner = count_jaxpr_counts(jx)
+            for k, v in inner.items():
+                counts.add(k, v * mult)
+        return
+    # everything else: ignore (shape ops, rng, etc.)
+
+
+def count_jaxpr_counts(jaxpr) -> FeatureCounts:
+    counts = FeatureCounts()
+    for eqn in jaxpr.eqns:
+        _count_eqn(eqn, counts, 1.0)
+    return counts
+
+
+def count_fn(fn: Callable, *example_args, **example_kwargs) -> FeatureCounts:
+    """Count features of ``fn`` at concrete input shapes (Algorithm 1)."""
+    jaxpr = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+    counts = count_jaxpr_counts(jaxpr.jaxpr)
+    counts.add("f_sync_launch_kernel", 1.0)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# Parametric (symbolic) counts — cached piecewise-polynomial reconstruction
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SymbolicCounts:
+    """Feature-id → ParametricCount, reconstructed once, evaluated cheaply."""
+
+    counts: Dict[str, ParametricCount]
+    assumptions: Tuple[str, ...]
+
+    def at(self, **sizes) -> FeatureCounts:
+        out = FeatureCounts()
+        for k, pc in self.counts.items():
+            out[k] = pc(**sizes)
+        return out
+
+
+def parametric_counts(
+    make_args: Callable[..., tuple],
+    fn: Callable,
+    var_degrees: Mapping[str, int],
+    *,
+    base: int = 16,
+    scale: int = 16,
+) -> SymbolicCounts:
+    """Reconstruct symbolic counts parametric in named size variables.
+
+    ``make_args(**sizes)`` builds (abstract) example arguments for ``fn`` at
+    given sizes; counts are probed on a small grid and interpolated exactly
+    (counts of static-control programs are polynomial in each size).
+    The result re-evaluates in microseconds for any problem size —
+    the paper's amortization property.
+    """
+    feature_ids = set()
+    cache: Dict[Tuple, FeatureCounts] = {}
+
+    def probe(**sizes) -> FeatureCounts:
+        key = tuple(sorted(sizes.items()))
+        if key not in cache:
+            args = make_args(**sizes)
+            cache[key] = count_fn(fn, *args)
+            feature_ids.update(cache[key].keys())
+        return cache[key]
+
+    # touch one probe to learn the feature set
+    probe(**{v: base for v in var_degrees})
+    polys: Dict[str, ParametricCount] = {}
+    assumptions = tuple(f"{v} % {scale} == 0" for v in var_degrees)
+    for fid in sorted(feature_ids):
+        p = interpolate_polynomial(
+            lambda **sizes: probe(**sizes)[fid], var_degrees,
+            base=base, scale=scale)
+        polys[fid] = ParametricCount(p, assumptions)
+    return SymbolicCounts(polys, assumptions)

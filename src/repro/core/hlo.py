@@ -1,0 +1,482 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` visits ``while`` bodies exactly
+once, so any scanned model (layers-scan, microbatch accumulation, chunked
+attention) is undercounted by its trip count.  This walker re-derives
+
+  * FLOPs            — dots from shapes × contracting dims, elementwise ops,
+                       multiplied through ``known_trip_count`` loop nests,
+  * HBM-proxy bytes  — operand+result bytes of *top-level* ops (fusion
+                       boundaries), the TPU intuition being one fusion =
+                       one HBM round-trip of its boundary tensors,
+  * collective bytes — payload and per-chip wire bytes per collective kind,
+                       with ring-algorithm wire factors (g−1)/g.
+
+Because the input is the SPMD-partitioned module, every quantity is
+*per-device* — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+TRANSCENDENTAL = {
+    "exponential", "exp", "log", "tanh", "rsqrt", "sqrt", "power", "sine",
+    "cosine", "logistic", "expm1", "log1p", "atan2", "cbrt", "erf",
+}
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "is-finite", "convert", "clz", "popcnt",
+} | TRANSCENDENTAL
+ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "domain",
+    "opt-barrier", "rng-get-and-update-state",
+}
+COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(shapes: List[Tuple[str, List[int]]]) -> float:
+    tot = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+def _nelems(shapes: List[Tuple[str, List[int]]]) -> float:
+    tot = 0.0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n
+    return tot
+
+
+@dataclass
+class HloOp:
+    name: str
+    opcode: str
+    result: List[Tuple[str, List[int]]]
+    rest: str  # operand list + attributes, unparsed tail
+
+
+@dataclass
+class HloComputation:
+    name: str
+    ops: List[HloOp] = field(default_factory=list)
+    op_types: Dict[str, List[Tuple[str, List[int]]]] = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, HloComputation], Optional[str]]:
+    comps: Dict[str, HloComputation] = {}
+    entry = None
+    cur: Optional[HloComputation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = HloComputation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = HloOp(m.group(1), m.group(3), _shape_list(m.group(2)),
+                       m.group(4))
+            cur.ops.append(op)
+            cur.op_types[op.name] = op.result
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    coll_payload: Dict[str, float] = field(default_factory=dict)
+    coll_wire: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes += other.bytes * mult
+        for k in other.coll_payload:
+            self.coll_payload[k] = self.coll_payload.get(k, 0.0) \
+                + other.coll_payload[k] * mult
+            self.coll_wire[k] = self.coll_wire.get(k, 0.0) \
+                + other.coll_wire[k] * mult
+            self.coll_count[k] = self.coll_count.get(k, 0.0) \
+                + other.coll_count[k] * mult
+
+    @property
+    def collective_payload_bytes(self) -> float:
+        return sum(self.coll_payload.values())
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(self.coll_wire.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "transcendentals": self.transcendentals,
+            "bytes": self.bytes,
+            "collective_payload_bytes": self.collective_payload_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collectives": {
+                k: {"payload": self.coll_payload[k],
+                    "wire": self.coll_wire[k],
+                    "count": self.coll_count[k]}
+                for k in sorted(self.coll_payload)
+            },
+        }
+
+
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n":"(\d+)"')
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_shapes(op: HloOp, comp: HloComputation):
+    """Shapes of named operands (only those defined in this computation)."""
+    # operands appear before the first '),' that closes the operand list —
+    # attributes also contain %names (calls=...), so cut at the first ')'
+    depth = 0
+    end = len(op.rest)
+    for i, ch in enumerate(op.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    names = _OPERANDS_RE.findall(op.rest[:end])
+    return [comp.op_types[n] for n in names if n in comp.op_types]
+
+
+def _group_size(op: HloOp, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(op.rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(op.rest)
+    if m:
+        # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda g: g - 1,          # × operand bytes
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+    "collective-broadcast": lambda g: 1.0,
+    "ragged-all-to-all": lambda g: (g - 1) / g,
+}
+
+
+class HloCostAnalyzer:
+    def __init__(self, text: str, *, num_devices: int = 1,
+                 track_breakdown: bool = False):
+        self.comps, self.entry = parse_hlo(text)
+        self.num_devices = num_devices
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+        self.track_breakdown = track_breakdown
+        self.byte_breakdown: Dict[str, float] = {}
+        self.flop_breakdown: Dict[str, float] = {}
+
+    # -- per-op ------------------------------------------------------------
+    def _op_cost(self, op: HloOp, comp: HloComputation,
+                 inside_fusion: bool) -> Cost:
+        c = Cost()
+        opc = op.opcode
+        if opc in ZERO_COST:
+            return c
+        res_bytes = _nbytes(op.result)
+        res_elems = _nelems(op.result)
+
+        base_opc = opc[:-6] if opc.endswith("-start") else opc
+        if base_opc in COLLECTIVES:
+            if opc.endswith("-done"):
+                return c
+            ops_shapes = _operand_shapes(op, comp)
+            payload = sum(_nbytes(s) for s in ops_shapes) or res_bytes
+            g = _group_size(op, self.num_devices)
+            wire = payload * _WIRE_FACTOR[base_opc](max(g, 1))
+            c.coll_payload[base_opc] = payload
+            c.coll_wire[base_opc] = wire
+            c.coll_count[base_opc] = 1
+            # collectives also read/write HBM
+            c.bytes += payload + res_bytes
+            return c
+
+        if opc == "fusion":
+            m = _CALLS_RE.search(op.rest)
+            called = self.comps.get(m.group(1)) if m else None
+            if called is not None:
+                inner = self.comp_cost(called.name, inside_fusion=True)
+                c.add(Cost(flops=inner.flops,
+                           transcendentals=inner.transcendentals))
+            if not inside_fusion:
+                if called is not None:
+                    c.bytes += self._fusion_boundary_bytes(op, comp, called)
+                else:
+                    opb = sum(_nbytes(s) for s in _operand_shapes(op, comp))
+                    c.bytes += opb + res_bytes
+            return c
+
+        if opc in ("while",):
+            mb = _BODY_RE.search(op.rest)
+            mc = _COND_RE.search(op.rest)
+            mt = _TRIP_RE.search(op.rest)
+            trip = int(mt.group(1)) if mt else 1
+            if mb and mb.group(1) in self.comps:
+                c.add(self.comp_cost(mb.group(1), inside_fusion=inside_fusion),
+                      trip)
+            if mc and mc.group(1) in self.comps:
+                c.add(self.comp_cost(mc.group(1), inside_fusion=inside_fusion),
+                      trip)
+            return c
+
+        if opc == "conditional":
+            m = _BRANCH_RE.search(op.rest)
+            if m:
+                names = _OPERANDS_RE.findall(m.group(1))
+                branches = [self.comp_cost(n, inside_fusion=inside_fusion)
+                            for n in names if n in self.comps]
+                if branches:  # average over branches
+                    for b in branches:
+                        c.add(b, 1.0 / len(branches))
+            return c
+
+        if opc in ("call", "async-start"):
+            m = _CALLS_RE.search(op.rest)
+            if m and m.group(1) in self.comps:
+                c.add(self.comp_cost(m.group(1), inside_fusion=inside_fusion))
+            return c
+
+        if opc == "dot":
+            contract = 1.0
+            ops_shapes = _operand_shapes(op, comp)
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+            if m and ops_shapes:
+                lhs_dims = ops_shapes[0][0][1]
+                for i in m.group(1).split(","):
+                    if i:
+                        contract *= lhs_dims[int(i)]
+            c.flops += 2.0 * res_elems * contract
+            if not inside_fusion:
+                c.bytes += sum(_nbytes(s) for s in ops_shapes) + res_bytes
+            return c
+
+        if opc == "convolution":
+            ops_shapes = _operand_shapes(op, comp)
+            if len(ops_shapes) >= 2:
+                rhs_elems = _nelems(ops_shapes[1])
+                out_feat = max(op.result[0][1][-1] if op.result[0][1] else 1, 1)
+                c.flops += 2.0 * res_elems * rhs_elems / out_feat
+            if not inside_fusion:
+                c.bytes += sum(_nbytes(s) for s in ops_shapes) + res_bytes
+            return c
+
+        if opc == "custom-call":
+            tgt = re.search(r'custom_call_target="([^"]+)"', op.rest)
+            tgt = tgt.group(1) if tgt else ""
+            ops_shapes = _operand_shapes(op, comp)
+            if "matmul" in tgt.lower() or "dot" in tgt.lower():
+                # infer contraction K from element counts: lhs=M·K, rhs=K·N,
+                # result=M·N → K = sqrt(lhs·rhs/result²)·…  (safe fallback)
+                if len(ops_shapes) >= 2 and res_elems > 0:
+                    k = math.sqrt(max(
+                        _nelems(ops_shapes[0]) * _nelems(ops_shapes[1]), 1.0)
+                        / (res_elems * res_elems)) * res_elems
+                    c.flops += 2.0 * k
+            if not inside_fusion:
+                c.bytes += sum(_nbytes(s) for s in ops_shapes) + res_bytes
+            return c
+
+        # ---- data movement specials --------------------------------------
+        if not inside_fusion:
+            if opc == "dynamic-update-slice":
+                ops_shapes = _operand_shapes(op, comp)
+                upd = _nbytes(ops_shapes[1]) if len(ops_shapes) > 1 else res_bytes
+                c.bytes += 2.0 * upd
+            elif opc in ("dynamic-slice", "gather", "iota", "broadcast",
+                         "reverse", "pad", "concatenate", "slice"):
+                c.bytes += 2.0 * res_bytes
+            elif opc == "scatter":
+                ops_shapes = _operand_shapes(op, comp)
+                upd = _nbytes(ops_shapes[-1]) if ops_shapes else res_bytes
+                c.bytes += 2.0 * upd
+            elif opc == "reshape":
+                pass  # layout-preserving reshape is free
+            elif opc in ("copy", "transpose", "copy-start", "copy-done",
+                         "all-gather-done"):
+                c.bytes += 2.0 * res_bytes
+            elif opc == "sort":
+                n = res_elems
+                c.bytes += 2.0 * res_bytes
+                c.flops += n * max(math.log2(max(n, 2)), 1.0)
+            else:
+                ops_shapes = _operand_shapes(op, comp)
+                c.bytes += sum(_nbytes(s) for s in ops_shapes) + res_bytes
+
+        # ---- arithmetic ----------------------------------------------------
+        if opc in ELEMENTWISE:
+            c.flops += res_elems
+            if opc in TRANSCENDENTAL:
+                c.transcendentals += res_elems
+        elif opc in ("reduce", "reduce-window"):
+            ops_shapes = _operand_shapes(op, comp)
+            c.flops += sum(_nelems(s) for s in ops_shapes[: max(
+                1, len(ops_shapes) // 2)])
+        elif opc == "map":
+            c.flops += res_elems
+        return c
+
+    # -- fusion boundary bytes (slice-aware) ---------------------------------
+    def _fusion_boundary_bytes(self, op: HloOp, comp: HloComputation,
+                               called: HloComputation) -> float:
+        """HBM traffic of one fusion execution.
+
+        A fusion parameter consumed *only* by slicing ops (dynamic-slice /
+        gather / slice) reads just the slices, not the whole operand — this
+        is what makes scan-body fusions over big stacked arrays (layer
+        params, KV caches, per-step inputs) cost O(slice), matching TPU
+        behaviour.  A root ``dynamic-update-slice`` writes (and reads) only
+        the updated window: XLA aliases the buffer in place.
+        """
+        SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+        # consumer map: param name -> list of consumer ops
+        consumers: Dict[str, List[HloOp]] = {}
+        for iop in called.ops:
+            for name in _OPERANDS_RE.findall(iop.rest):
+                consumers.setdefault(name, []).append(iop)
+        # params in operand order
+        params: List[Tuple[int, HloOp]] = []
+        for iop in called.ops:
+            if iop.opcode == "parameter":
+                mi = re.match(r"\s*(\d+)\)", iop.rest)
+                idx = int(mi.group(1)) if mi else len(params)
+                params.append((idx, iop))
+        params.sort(key=lambda t: t[0])
+        root = called.ops[-1] if called.ops else None
+        root_is_dus = root is not None and root.opcode == "dynamic-update-slice"
+        dus_buffer = None
+        if root_is_dus:
+            names = _OPERANDS_RE.findall(root.rest)
+            dus_buffer = names[0] if names else None
+
+        total = 0.0
+        for _, pop in params:
+            cons = consumers.get(pop.name, [])
+            if root_is_dus and pop.name == dus_buffer and len(cons) == 1:
+                continue  # aliased in-place buffer: no read
+            if cons and all(x.opcode in SLICE_OPS for x in cons):
+                total += sum(_nbytes(x.result) for x in cons)
+            else:
+                total += _nbytes(pop.result)
+        # writes
+        if root_is_dus:
+            names = _OPERANDS_RE.findall(root.rest)
+            upd = names[1] if len(names) > 1 else None
+            upd_shape = called.op_types.get(upd) if upd else None
+            total += _nbytes(upd_shape) if upd_shape else _nbytes(root.result)
+        else:
+            total += _nbytes(op.result)
+        return total
+
+    # -- per-computation ----------------------------------------------------
+    def comp_cost(self, name: str, inside_fusion: bool = False) -> Cost:
+        key = (name, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps[name]
+        total = Cost()
+        for op in comp.ops:
+            c = self._op_cost(op, comp, inside_fusion)
+            if self.track_breakdown:
+                label = op.opcode
+                if op.opcode == "fusion":
+                    # pull the dominant inner op name into the label
+                    m = _CALLS_RE.search(op.rest)
+                    label = f"fusion:{m.group(1).split('_')[0] if m else '?'}"
+                self.byte_breakdown[label] = \
+                    self.byte_breakdown.get(label, 0.0) + c.bytes
+                self.flop_breakdown[label] = \
+                    self.flop_breakdown.get(label, 0.0) + c.flops
+            total.add(c)
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo_text(text: str, *, num_devices: int = 1) -> Dict:
+    return HloCostAnalyzer(text, num_devices=num_devices).entry_cost().as_dict()
+
+
+def analyze_hlo_file(path: str, *, num_devices: int = 1) -> Dict:
+    data = open(path, "rb").read()
+    if path.endswith(".zst"):
+        import zstandard as zstd
+
+        data = zstd.ZstdDecompressor().decompress(data, max_output_size=1 << 31)
+    return analyze_hlo_text(data.decode(), num_devices=num_devices)

@@ -1,0 +1,134 @@
+"""Perflex-style cost models: user-written arithmetic expressions over
+kernel *features* (``f_*``) and machine *parameters* (``p_*``).
+
+  model = Model("f_wall_time_cpu_host",
+                "p_f32madd * f_op_float32_madd + "
+                "p_membw * (f_mem_contig_float32_load "
+                "           + f_mem_contig_float32_store)")
+
+Expressions are parsed with Python's ``ast`` into a safe, differentiable
+jax-numpy evaluator — so a model can be arbitrarily nonlinear (the overlap
+model of §7.4 uses ``smooth_step``), and calibration gets exact Jacobians
+via autodiff instead of the paper's symbolic differentiation.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import overlap as _ovl
+from repro.core.counting import FeatureCounts
+
+_FUNCS: Dict[str, Callable] = {
+    "smooth_step": _ovl.smooth_step,
+    "overlap2": _ovl.overlap2,
+    "overlap2_raw": _ovl.overlap2_raw,
+    "overlap3": _ovl.overlap3,
+    "smoothmax": lambda *a: _ovl.smoothmax(a[:-1], a[-1]),
+    "partial_overlap2": _ovl.partial_overlap2,
+    "exp": jnp.exp, "log": jnp.log, "tanh": jnp.tanh, "sqrt": jnp.sqrt,
+    "maximum": jnp.maximum, "minimum": jnp.minimum, "abs": jnp.abs,
+}
+
+_ALLOWED_NODES = (
+    ast.Expression, ast.BinOp, ast.UnaryOp, ast.Call, ast.Name, ast.Load,
+    ast.Constant, ast.Add, ast.Sub, ast.Mult, ast.Div, ast.Pow, ast.USub,
+    ast.UAdd, ast.Tuple,
+)
+
+
+def _parse(expr: str) -> ast.Expression:
+    tree = ast.parse(expr, mode="eval")
+    for node in ast.walk(tree):
+        if not isinstance(node, _ALLOWED_NODES):
+            raise ValueError(f"disallowed syntax in model expression: "
+                             f"{ast.dump(node)[:60]}")
+        if isinstance(node, ast.Call):
+            if not isinstance(node.func, ast.Name) or \
+                    node.func.id not in _FUNCS:
+                raise ValueError(f"unknown function in model: "
+                                 f"{getattr(node.func, 'id', '?')}")
+    return tree
+
+
+def _names(tree: ast.Expression) -> List[str]:
+    return sorted({n.id for n in ast.walk(tree)
+                   if isinstance(n, ast.Name) and n.id not in _FUNCS})
+
+
+@dataclass
+class Model:
+    """output feature ≈ g(input features; parameters)."""
+
+    output_feature: str
+    expr: str
+
+    def __post_init__(self):
+        self._tree = _parse(self.expr)
+        names = _names(self._tree)
+        self.param_names: List[str] = [n for n in names if n.startswith("p_")]
+        self.feature_names: List[str] = [n for n in names if n.startswith("f_")]
+        bad = [n for n in names if not n.startswith(("p_", "f_"))]
+        if bad:
+            raise ValueError(f"model names must start with p_/f_: {bad}")
+        code = compile(self._tree, "<perflex-model>", "eval")
+
+        def evaluator(env: Mapping[str, jax.Array]):
+            return eval(code, {"__builtins__": {}}, {**_FUNCS, **env})
+
+        self._eval = evaluator
+
+    # -- feature bookkeeping ------------------------------------------------
+    def all_features(self) -> List[str]:
+        return [self.output_feature, *self.feature_names]
+
+    # -- evaluation -----------------------------------------------------------
+    def evaluate(self, param_values: Mapping[str, float],
+                 feature_values: Mapping[str, float]):
+        env = {n: jnp.asarray(param_values[n]) for n in self.param_names}
+        env.update({n: jnp.asarray(float(feature_values.get(n, 0.0)))
+                    for n in self.feature_names})
+        return self._eval(env)
+
+    def eval_with_counts(self, param_values: Mapping[str, float],
+                         counts: FeatureCounts):
+        return float(self.evaluate(param_values, counts))
+
+    # -- residual builder for calibration -----------------------------------
+    def residual_fn(self, feature_table: Sequence[Mapping[str, float]],
+                    *, scale_by_output: bool = True):
+        """Returns (resid(p_vec) -> r[k], p0, param_names).
+
+        ``feature_table``: one row per measurement kernel mapping feature id
+        → value, including the output feature.  With ``scale_by_output``
+        (paper §7.2) every row is divided by its output value, making the
+        fit relative-error based.
+        """
+        rows = []
+        for row in feature_table:
+            t = float(row[self.output_feature])
+            feats = {n: float(row.get(n, 0.0)) for n in self.feature_names}
+            if scale_by_output:
+                assert t > 0, "output feature must be positive to scale"
+                feats = {k: v / t for k, v in feats.items()}
+                rows.append((feats, 1.0))
+            else:
+                rows.append((feats, t))
+
+        pn = self.param_names
+
+        def resid(p_vec: jax.Array) -> jax.Array:
+            outs = []
+            for feats, t in rows:
+                env = {n: p_vec[i] for i, n in enumerate(pn)}
+                env.update({k: jnp.asarray(v) for k, v in feats.items()})
+                outs.append(t - self._eval(env))
+            return jnp.stack(outs)
+
+        p0 = jnp.full((len(pn),), 1e-9, jnp.float64
+                      if jax.config.read("jax_enable_x64") else jnp.float32)
+        return resid, p0, pn

@@ -1,0 +1,70 @@
+"""Operation-overlap modeling (paper §7.4).
+
+``smooth_step`` is the paper's differentiable step approximation
+ŝ(x) = (tanh(p_edge · x) + 1) / 2, used to express
+t ≈ c_a·ŝ(c_a − c_b) + c_b·ŝ(c_b − c_a)  — the fully-overlapped two-term
+cost.  ``overlap3``/``smoothmax`` generalize to the three-term TPU roofline
+(compute / HBM / ICI), which is exactly the "everything overlaps" limit the
+roofline assumes: t → max(c_compute, c_memory, c_collective).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def smooth_step(x, p_edge):
+    """ŝ(x) = (tanh(p_edge·x)+1)/2 — differentiable step (paper eq. 6)."""
+    return (jnp.tanh(p_edge * x) + 1.0) / 2.0
+
+
+def overlap2(c_a, c_b, p_edge):
+    """Fully-overlapped two-component cost (paper eq. 5), with the step
+    argument *normalized* by the total cost: ŝ(p_edge·(a−b)/(a+b)).
+
+    Beyond-paper fix (recorded in DESIGN.md): the raw form's p_edge is
+    scale-dependent, so a model calibrated on output-scaled feature rows
+    (paper §7.2, arguments ≈ 1) mispredicts when later evaluated at raw
+    scale (seconds).  Normalizing makes overlap2 homogeneous of degree 1 —
+    calibration scaling cancels exactly — while preserving the p_edge → ∞
+    max() limit.  ``overlap2_raw`` keeps the paper's literal form.
+    """
+    tot = jnp.abs(c_a) + jnp.abs(c_b) + 1e-30
+    return c_a * smooth_step((c_a - c_b) / tot, p_edge) \
+        + c_b * smooth_step((c_b - c_a) / tot, p_edge)
+
+
+def overlap2_raw(c_a, c_b, p_edge):
+    """Paper eq. (5) verbatim (unnormalized step argument)."""
+    return c_a * smooth_step(c_a - c_b, p_edge) \
+        + c_b * smooth_step(c_b - c_a, p_edge)
+
+
+def overlap3(c_a, c_b, c_c, p_edge):
+    """Pairwise generalization: each term gated on being the max
+    (normalized switch arguments, as in overlap2)."""
+    tot = jnp.abs(c_a) + jnp.abs(c_b) + jnp.abs(c_c) + 1e-30
+    sa = smooth_step((c_a - c_b) / tot, p_edge) * \
+        smooth_step((c_a - c_c) / tot, p_edge)
+    sb = smooth_step((c_b - c_a) / tot, p_edge) * \
+        smooth_step((c_b - c_c) / tot, p_edge)
+    sc = smooth_step((c_c - c_a) / tot, p_edge) * \
+        smooth_step((c_c - c_b) / tot, p_edge)
+    return c_a * sa + c_b * sb + c_c * sc
+
+
+def smoothmax(cs, p_edge):
+    """log-sum-exp smooth maximum (beyond-paper): → max as p_edge → ∞.
+
+    Scale-normalized so it is well-conditioned for very small cost values
+    (seconds): lse(p·c)/p with the max factored out.
+    """
+    cs = jnp.stack(list(cs))
+    m = jnp.max(cs, axis=0)
+    return m + jnp.log(jnp.sum(jnp.exp(p_edge * (cs - m)), axis=0)) / p_edge
+
+
+def partial_overlap2(c_a, c_b, p_edge, alpha):
+    """Partial overlap (paper §7.4 'variations of (6)'): the smaller cost is
+    hidden only by fraction ``alpha`` ∈ [0, 1]."""
+    full = overlap2(c_a, c_b, p_edge)
+    return alpha * full + (1.0 - alpha) * (c_a + c_b)

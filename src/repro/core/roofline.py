@@ -1,0 +1,143 @@
+"""Three-term roofline analysis from dry-run artifacts (deliverable g).
+
+For every (arch × shape × mesh) cell the dry-run saved (i) the JSON record
+with XLA's memory/cost analysis and (ii) the optimized post-SPMD HLO.  This
+module re-walks the HLO with the trip-count-aware analyzer and derives
+
+    compute term    = HLO_FLOPs_per_chip   / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip   / HBM_bw
+    collective term = wire_bytes_per_chip  / link_bw
+
+(The walked HLO is already the per-device partitioned module, so the
+"/ chips" in the assignment's formulas is built in.)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI, 16 GiB HBM.
+
+The overlap model of the paper (§7.4) is what justifies taking
+max(compute, memory, collective) as the roofline time: it is the calibrated
+p_edge → ∞ limit of the three-way overlapped cost model in
+``repro.core.overlap``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.core.hlo import analyze_hlo_file
+from repro.models.counting import config_active_param_count, model_flops
+
+V5E = dict(
+    peak_flops_bf16=197e12,   # per chip
+    hbm_bw=819e9,             # bytes/s per chip
+    ici_bw=50e9,              # bytes/s per link (assignment constant)
+    hbm_bytes=16 * 2**30,
+)
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-chip quantities from the HLO walk
+    hlo_flops: float
+    hlo_bytes: float
+    coll_wire_bytes: float
+    coll_breakdown: Dict = field(default_factory=dict)
+    # derived
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    dominant: str = ""
+    model_flops_total: float = 0.0
+    useful_ratio: float = 0.0      # MODEL_FLOPS / (HLO_FLOPs × chips)
+    roofline_time: float = 0.0     # max of the three terms
+    mfu_at_roofline: float = 0.0   # MODEL_FLOPS / (chips · peak · t_roofline)
+    hbm_gb_per_chip: float = 0.0
+    status: str = "ok"
+    note: str = ""
+
+    def finish(self, hw=V5E):
+        self.t_compute = self.hlo_flops / hw["peak_flops_bf16"]
+        self.t_memory = self.hlo_bytes / hw["hbm_bw"]
+        self.t_collective = self.coll_wire_bytes / hw["ici_bw"]
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.dominant = max(terms, key=terms.get)
+        self.roofline_time = max(terms.values())
+        total_hlo = self.hlo_flops * self.chips
+        self.useful_ratio = (self.model_flops_total / total_hlo
+                             if total_hlo else 0.0)
+        denom = self.chips * hw["peak_flops_bf16"] * self.roofline_time
+        self.mfu_at_roofline = (self.model_flops_total / denom
+                                if denom else 0.0)
+        return self
+
+    def as_dict(self):
+        return {k: v for k, v in self.__dict__.items()}
+
+
+def roofline_for_record(rec: Dict, *, hw=V5E) -> RooflineRow:
+    arch, shape_name, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    row = RooflineRow(
+        arch=arch, shape=shape_name, mesh=mesh, chips=chips,
+        hlo_flops=0.0, hlo_bytes=0.0, coll_wire_bytes=0.0,
+        model_flops_total=model_flops(cfg, shape),
+    )
+    if rec.get("status") != "ok":
+        row.status = rec.get("status", "fail")
+        row.note = rec.get("error", "")[:120]
+        return row
+    analysis = analyze_hlo_file(rec["hlo_path"], num_devices=chips)
+    row.hlo_flops = analysis["flops"]
+    row.hlo_bytes = analysis["bytes"]
+    row.coll_wire_bytes = analysis["collective_wire_bytes"]
+    row.coll_breakdown = analysis["collectives"]
+    row.hbm_gb_per_chip = rec["memory"]["total_per_device_bytes"] / 2**30
+    return row.finish(hw)
+
+
+def roofline_table(dryrun_dir: str, *, mesh: str = "single",
+                   hw=V5E) -> List[RooflineRow]:
+    rows = []
+    for p in sorted(Path(dryrun_dir).glob("*.json")):
+        if p.name.startswith("_"):
+            continue
+        rec = json.loads(p.read_text())
+        if rec.get("mesh") != mesh:
+            continue
+        try:
+            rows.append(roofline_for_record(rec, hw=hw))
+        except Exception as e:  # noqa: BLE001
+            rows.append(RooflineRow(
+                arch=rec.get("arch", "?"), shape=rec.get("shape", "?"),
+                mesh=mesh, chips=0, hlo_flops=0, hlo_bytes=0,
+                coll_wire_bytes=0, status="analysis-error", note=str(e)[:120]))
+    return rows
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':18s} {'shape':12s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
+           f"{'t_coll(s)':>10s} {'bound':>6s} {'useful':>7s} {'MFU@roof':>8s} "
+           f"{'HBM(GiB)':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.status != "ok":
+            lines.append(f"{r.arch:18s} {r.shape:12s} {r.status}: {r.note}")
+            continue
+        lines.append(
+            f"{r.arch:18s} {r.shape:12s} {r.t_compute:10.3e} "
+            f"{r.t_memory:10.3e} {r.t_collective:10.3e} "
+            f"{r.dominant[:6]:>6s} {r.useful_ratio:7.3f} "
+            f"{r.mfu_at_roofline:8.3f} {r.hbm_gb_per_chip:8.2f}")
+    return "\n".join(lines)

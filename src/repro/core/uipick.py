@@ -1,0 +1,655 @@
+"""UIPiCK — a parameterized collection of measurement-kernel generators
+(paper §7.1), re-targeted from OpenCL to JAX.
+
+Each *generator* owns
+  * a set of **generator filter tags** (single values, e.g. ``matmul_sq``),
+  * an **argument space** — allowed values per argument; one kernel is
+    produced per element of the Cartesian product of allowed values,
+and the collection filters generators/variants from user-provided tags
+under one of the paper's four match conditions.
+
+Measurement kernels are ordinary jit-able JAX callables with concrete
+argument builders, so they can be (a) *timed* on the host device for
+black-box calibration, and (b) *counted* by ``repro.core.counting`` for
+feature extraction — the same dual use as the paper's OpenCL kernels.
+The Pallas twins of the hot kernels live in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.counting import FeatureCounts, count_fn
+
+
+class MatchCondition(enum.Enum):
+    IDENTICAL = 1   # generator tag set == user tags
+    SUBSET = 2      # generator tag set ⊆ user tags
+    SUPERSET = 3    # generator tag set ⊇ user tags (paper default)
+    INTERSECT = 4   # non-empty intersection
+
+
+@dataclass
+class MeasurementKernel:
+    name: str
+    fn: Callable
+    make_args: Callable[[], tuple]
+    tags: Dict[str, Any]
+    sizes: Dict[str, int] = field(default_factory=dict)
+
+    _counts: Optional[FeatureCounts] = None
+
+    def counts(self) -> FeatureCounts:
+        if self._counts is None:
+            self._counts = count_fn(self.fn, *self.make_args())
+        return self._counts
+
+    def time(self, *, trials: int = 20, warmup: int = 3) -> float:
+        """Median wall-clock seconds per call on the host device."""
+        jf = jax.jit(self.fn)
+        args = self.make_args()
+        for _ in range(warmup):
+            out = jf(*args)
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jf(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+
+@dataclass
+class Generator:
+    name: str
+    gen_tags: FrozenSet[str]
+    arg_space: Dict[str, Tuple[Any, ...]]
+    build: Callable[..., MeasurementKernel]
+
+    def variants(self, constraints: Mapping[str, Tuple[Any, ...]]
+                 ) -> Iterable[MeasurementKernel]:
+        space = {}
+        for arg, allowed in self.arg_space.items():
+            if arg in constraints:
+                chosen = tuple(v for v in constraints[arg] if v in allowed)
+                if not chosen:
+                    return  # constraint excludes this generator entirely
+                space[arg] = chosen
+            else:
+                space[arg] = allowed
+        names = sorted(space)
+        for combo in itertools.product(*(space[n] for n in names)):
+            kw = dict(zip(names, combo))
+            try:
+                yield self.build(**kw)
+            except _SkipVariant:
+                continue
+
+
+class _SkipVariant(Exception):
+    """Raised by builders for incoherent argument combinations."""
+
+
+def _parse_value(s: str) -> Any:
+    if s in ("True", "False"):
+        return s == "True"
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        return s
+
+
+def parse_filter_tags(filter_tags: Sequence[str]
+                      ) -> Tuple[FrozenSet[str], Dict[str, Tuple[Any, ...]]]:
+    gen_tags: set = set()
+    variant: Dict[str, Tuple[Any, ...]] = {}
+    for t in filter_tags:
+        if ":" in t:
+            arg, vals = t.split(":", 1)
+            variant[arg] = tuple(_parse_value(v) for v in vals.split(","))
+        else:
+            gen_tags.add(t)
+    return frozenset(gen_tags), variant
+
+
+class KernelCollection:
+    def __init__(self, generators: Sequence[Generator]):
+        self.generators = list(generators)
+
+    def generate_kernels(
+        self,
+        filter_tags: Sequence[str],
+        generator_match_cond: MatchCondition = MatchCondition.SUPERSET,
+    ) -> List[MeasurementKernel]:
+        user_tags, constraints = parse_filter_tags(filter_tags)
+        out: List[MeasurementKernel] = []
+        for g in self.generators:
+            gt = g.gen_tags
+            if generator_match_cond is MatchCondition.IDENTICAL:
+                ok = gt == user_tags
+            elif generator_match_cond is MatchCondition.SUBSET:
+                ok = gt <= user_tags
+            elif generator_match_cond is MatchCondition.SUPERSET:
+                ok = gt >= user_tags
+            else:
+                ok = bool(gt & user_tags)
+            if ok:
+                out.extend(g.variants(constraints))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Feature-value gathering (paper fig. 3, step 3)
+# ---------------------------------------------------------------------------
+
+
+def gather_feature_values(
+    features: Sequence[str],
+    kernels: Sequence[MeasurementKernel],
+    *,
+    trials: int = 20,
+) -> List[Dict[str, float]]:
+    """One row per measurement kernel: feature id → value.
+
+    ``f_wall_time_*`` output features are *measured* (black box); all other
+    features come from the automatic jaxpr counter.
+    """
+    rows = []
+    for k in kernels:
+        counts = k.counts()
+        row: Dict[str, float] = {}
+        for f in features:
+            if f.startswith("f_wall_time"):
+                row[f] = k.time(trials=trials)
+            else:
+                row[f] = counts[f]
+        row["_kernel"] = k.name  # bookkeeping, ignored by models
+        rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Built-in generators
+# ---------------------------------------------------------------------------
+
+
+def _dtype(s: str):
+    return jnp.dtype({"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                      "float64": jnp.float64}[s])
+
+
+def _key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+# ---- matmul_sq: the paper's running example --------------------------------
+
+
+def _build_matmul_sq(*, n: int, dtype: str, prefetch: bool,
+                     tile: int) -> MeasurementKernel:
+    dt = _dtype(dtype)
+    if prefetch:
+        # blocked matmul: k-loop over [tile]-wide panels (the JAX analogue of
+        # the local-memory prefetch variant — staged tiles, MXU-friendly)
+        if n % tile:
+            raise _SkipVariant
+        nk = n // tile
+
+        def fn(a, b):
+            ar = a.reshape(n, nk, tile)
+
+            def body(acc, i):
+                ak = jax.lax.dynamic_slice_in_dim(ar, i, 1, axis=1)[:, 0]
+                bk = jax.lax.dynamic_slice_in_dim(b, i * tile, tile, axis=0)
+                return acc + ak @ bk, None
+
+            acc, _ = jax.lax.scan(body, jnp.zeros((n, n), dt),
+                                  jnp.arange(nk))
+            return acc
+    else:
+        def fn(a, b):
+            return a @ b
+
+    def make_args():
+        a = jax.random.normal(_key(1), (n, n), jnp.float32).astype(dt)
+        b = jax.random.normal(_key(2), (n, n), jnp.float32).astype(dt)
+        return a, b
+
+    return MeasurementKernel(
+        name=f"matmul_sq_n{n}_{dtype}_pf{prefetch}_t{tile}",
+        fn=fn, make_args=make_args,
+        tags=dict(n=n, dtype=dtype, prefetch=prefetch, tile=tile),
+        sizes=dict(n=n))
+
+
+MATMUL_SQ = Generator(
+    "matmul_sq",
+    frozenset({"matmul_sq", "matmul"}),
+    arg_space=dict(
+        n=(256, 384, 512, 640, 768, 1024),
+        dtype=("float32", "bfloat16"),
+        prefetch=(True, False),
+        tile=(16, 32, 64, 128),
+    ),
+    build=_build_matmul_sq,
+)
+
+
+# ---- flops_madd_pattern: peak-FLOP microbenchmark ---------------------------
+
+
+def _build_madd(*, nelements: int, iters: int, dtype: str) -> MeasurementKernel:
+    dt = _dtype(dtype)
+
+    def fn(x, a, b):
+        # 8 independent accumulator streams, 8-way unrolled madd chain —
+        # the SHOC MaxFlops pattern (paper §7.1.2) vectorized per element
+        xs = [x + jnp.asarray(i, dt) for i in range(8)]
+
+        def body(i, xs):
+            return [xi * a + b for xi in xs]
+
+        xs = jax.lax.fori_loop(0, iters, body, xs)
+        out = xs[0]
+        for xi in xs[1:]:
+            out = out + xi
+        return out
+
+    def make_args():
+        x = jax.random.normal(_key(1), (nelements,), jnp.float32).astype(dt)
+        return x, jnp.asarray(1.000001, dt), jnp.asarray(1e-7, dt)
+
+    return MeasurementKernel(
+        name=f"madd_n{nelements}_i{iters}_{dtype}",
+        fn=fn, make_args=make_args,
+        tags=dict(nelements=nelements, iters=iters, dtype=dtype),
+        sizes=dict(nelements=nelements, iters=iters))
+
+
+FLOPS_MADD = Generator(
+    "flops_madd_pattern",
+    frozenset({"flops_madd_pattern", "flops"}),
+    arg_space=dict(
+        nelements=(4096, 16384, 65536),
+        iters=(64, 128, 256, 512),
+        dtype=("float32", "bfloat16"),
+    ),
+    build=_build_madd,
+)
+
+
+# ---- flops_dot_pattern: contraction (MXU-class) madd throughput -------------
+#
+# TPU (and CPU BLAS) execute *contraction* madds on a different unit than
+# elementwise FMAs — the MXU vs VPU dichotomy — so ``f_op_*_madd`` (dots)
+# needs its own measurement kernel, distinct from the elementwise madd
+# pattern above.  A cache/VMEM-resident square-matrix power chain reveals
+# the peak contraction rate.
+
+
+def _build_dot(*, n_dot: int, iters: int, dtype: str) -> MeasurementKernel:
+    dt = _dtype(dtype)
+
+    def fn(z, w):
+        def body(c, _):
+            c = c @ w
+            # renormalize cheaply to avoid overflow across iterations
+            return c * jnp.asarray(0.999, dt), None
+
+        c, _ = jax.lax.scan(body, z, None, length=iters)
+        return c
+
+    def make_args():
+        z = jax.random.normal(_key(1), (n_dot, n_dot), jnp.float32)
+        w = jax.random.normal(_key(2), (n_dot, n_dot), jnp.float32)
+        w = w / jnp.linalg.norm(w, axis=0, keepdims=True)
+        return z.astype(dt), w.astype(dt)
+
+    return MeasurementKernel(
+        name=f"dotflops_n{n_dot}_i{iters}_{dtype}",
+        fn=fn, make_args=make_args,
+        tags=dict(n_dot=n_dot, iters=iters, dtype=dtype),
+        sizes=dict(n_dot=n_dot, iters=iters))
+
+
+FLOPS_DOT = Generator(
+    "flops_dot_pattern",
+    frozenset({"flops_dot_pattern", "flops"}),
+    arg_space=dict(
+        n_dot=(128, 256, 384),
+        iters=(16, 64, 128),
+        dtype=("float32", "bfloat16"),
+    ),
+    build=_build_dot,
+)
+
+
+# ---- mem_stream: global-memory access patterns ------------------------------
+
+
+def _build_stream(*, nelements: int, pattern: str, n_arrays: int,
+                  dtype: str) -> MeasurementKernel:
+    dt = _dtype(dtype)
+    side = int(np.sqrt(nelements))
+
+    if pattern == "contig":
+        def fn(*arrs):
+            out = arrs[0]
+            for a in arrs[1:]:
+                out = out + a
+            return out
+
+        def make_args():
+            return tuple(
+                jax.random.normal(_key(i), (nelements,), jnp.float32).astype(dt)
+                for i in range(n_arrays))
+    elif pattern == "strided":
+        def fn(*arrs):
+            out = arrs[0].T
+            for a in arrs[1:]:
+                out = out + a.T  # transposed read — lane-unfriendly layout
+            return out
+
+        def make_args():
+            return tuple(
+                jax.random.normal(_key(i), (side, side), jnp.float32).astype(dt)
+                for i in range(n_arrays))
+    elif pattern == "gather":
+        def fn(idx, *arrs):
+            out = arrs[0][idx]
+            for a in arrs[1:]:
+                out = out + a[idx]
+            return out
+
+        def make_args():
+            idx = jax.random.randint(_key(9), (nelements,), 0, nelements)
+            return (idx,) + tuple(
+                jax.random.normal(_key(i), (nelements,), jnp.float32).astype(dt)
+                for i in range(n_arrays))
+    elif pattern == "shift":
+        # rolled/concatenated access — the lowering jnp.roll produces;
+        # distinct cost class on hosts where concat materializes copies
+        def fn(*arrs):
+            out = jnp.roll(arrs[0], 1)
+            for a in arrs[1:]:
+                out = out + jnp.roll(a, 1)
+            return out
+
+        def make_args():
+            return tuple(
+                jax.random.normal(_key(i), (nelements,), jnp.float32).astype(dt)
+                for i in range(n_arrays))
+    else:
+        raise _SkipVariant
+
+    return MeasurementKernel(
+        name=f"stream_{pattern}_n{nelements}_a{n_arrays}_{dtype}",
+        fn=fn, make_args=make_args,
+        tags=dict(nelements=nelements, pattern=pattern, n_arrays=n_arrays,
+                  dtype=dtype),
+        sizes=dict(nelements=nelements))
+
+
+MEM_STREAM = Generator(
+    "mem_stream",
+    frozenset({"mem_stream", "gmem"}),
+    arg_space=dict(
+        nelements=(262144, 1048576, 4194304, 16777216),
+        pattern=("contig", "strided", "gather", "shift"),
+        n_arrays=(1, 2, 4),
+        dtype=("float32", "bfloat16"),
+    ),
+    build=_build_stream,
+)
+
+
+# ---- onchip_pattern: VMEM/cache-resident working set ------------------------
+
+
+def _build_onchip(*, working_set: int, iters: int, dtype: str
+                  ) -> MeasurementKernel:
+    dt = _dtype(dtype)
+
+    def fn(x):
+        def body(i, x):
+            return jnp.roll(x, 1) + x  # stays in cache/VMEM, load+store heavy
+
+        return jax.lax.fori_loop(0, iters, body, x)
+
+    def make_args():
+        return (jax.random.normal(_key(1), (working_set,),
+                                  jnp.float32).astype(dt),)
+
+    return MeasurementKernel(
+        name=f"onchip_w{working_set}_i{iters}_{dtype}",
+        fn=fn, make_args=make_args,
+        tags=dict(working_set=working_set, iters=iters, dtype=dtype),
+        sizes=dict(working_set=working_set, iters=iters))
+
+
+ONCHIP = Generator(
+    "onchip_pattern",
+    frozenset({"onchip_pattern", "lmem"}),
+    arg_space=dict(
+        working_set=(2048, 8192, 32768),
+        iters=(64, 256, 1024),
+        dtype=("float32",),
+    ),
+    build=_build_onchip,
+)
+
+
+# ---- empty / launch-overhead kernel ----------------------------------------
+
+
+def _build_empty(*, nelements: int) -> MeasurementKernel:
+    def fn(x):
+        return x
+
+    def make_args():
+        return (jnp.zeros((nelements,), jnp.float32),)
+
+    return MeasurementKernel(
+        name=f"empty_n{nelements}", fn=fn, make_args=make_args,
+        tags=dict(nelements=nelements), sizes=dict(nelements=nelements))
+
+
+EMPTY = Generator(
+    "empty_kernel",
+    frozenset({"empty_kernel", "launch"}),
+    arg_space=dict(nelements=(16, 1024, 65536)),
+    build=_build_empty,
+)
+
+
+# ---- sync / loop-step overhead ----------------------------------------------
+
+
+def _build_loopstep(*, steps: int) -> MeasurementKernel:
+    def fn(x):
+        def body(c, _):
+            return c + 1.0, None
+
+        c, _ = jax.lax.scan(body, x, None, length=steps)
+        return c
+
+    def make_args():
+        return (jnp.zeros((), jnp.float32),)
+
+    return MeasurementKernel(
+        name=f"loopstep_s{steps}", fn=fn, make_args=make_args,
+        tags=dict(steps=steps), sizes=dict(steps=steps))
+
+
+LOOPSTEP = Generator(
+    "sync_loop_pattern",
+    frozenset({"sync_loop_pattern", "sync"}),
+    arg_space=dict(steps=(64, 512, 4096, 32768)),
+    build=_build_loopstep,
+)
+
+
+# ---- overlap kernel (paper §7.4): 1 global read + m on-chip updates ---------
+
+
+def _build_overlap(*, nelements: int, m: int, dtype: str) -> MeasurementKernel:
+    dt = _dtype(dtype)
+
+    def fn(x):
+        # one pass over the large array (memory-bound part)
+        s = jnp.sum(x, dtype=jnp.float32)
+        # m on-chip update rounds over a small resident buffer
+        buf = jnp.full((1024,), s.astype(dt))
+
+        def body(i, b):
+            return b * jnp.asarray(0.999, dt) + jnp.asarray(1e-5, dt)
+
+        buf = jax.lax.fori_loop(0, m, body, buf)
+        return jnp.sum(buf)
+
+    def make_args():
+        return (jax.random.normal(_key(1), (nelements,),
+                                  jnp.float32).astype(dt),)
+
+    return MeasurementKernel(
+        name=f"overlap_n{nelements}_m{m}_{dtype}",
+        fn=fn, make_args=make_args,
+        tags=dict(nelements=nelements, m=m, dtype=dtype),
+        sizes=dict(nelements=nelements, m=m))
+
+
+OVERLAP = Generator(
+    "overlap_pattern",
+    frozenset({"overlap_pattern", "overlap"}),
+    arg_space=dict(
+        nelements=(4194304, 16777216),
+        m=(0, 4, 16, 64, 256, 1024, 4096, 16384, 65536),
+        dtype=("float32",),
+    ),
+    build=_build_overlap,
+)
+
+
+# ---- DG differentiation (paper §8.4) ----------------------------------------
+
+
+def _build_dg(*, nelements_dg: int, nunit_nodes: int, nmatrices: int,
+              variant: str, dtype: str) -> MeasurementKernel:
+    dt = _dtype(dtype)
+    K, N, M = nelements_dg, nunit_nodes, nmatrices
+
+    if variant == "basic":
+        def fn(dmat, u):
+            return jnp.einsum("mij,kj->mki", dmat, u)
+    elif variant == "u_pf":
+        # contraction reassociated to reuse u across matrices ("prefetch u")
+        def fn(dmat, u):
+            d2 = dmat.reshape(M * N, N)
+            r = jnp.einsum("pj,kj->pk", d2, u)
+            return r.reshape(M, N, K).transpose(0, 2, 1)
+    elif variant == "dmat_pf":
+        # loop over matrices, each a plain GEMM ("prefetch diff_mat")
+        def fn(dmat, u):
+            def body(_, dm):
+                return None, u @ dm.T
+
+            _, r = jax.lax.scan(body, None, dmat)
+            return r
+    elif variant == "dmat_pf_T":
+        # + transposed element-data layout (the paper's fastest variant)
+        def fn(dmat, ut):
+            def body(_, dm):
+                return None, dm @ ut
+
+            _, r = jax.lax.scan(body, None, dmat)
+            return r
+    else:
+        raise _SkipVariant
+
+    def make_args():
+        dmat = jax.random.normal(_key(1), (M, N, N), jnp.float32).astype(dt)
+        if variant == "dmat_pf_T":
+            u = jax.random.normal(_key(2), (N, K), jnp.float32).astype(dt)
+        else:
+            u = jax.random.normal(_key(2), (K, N), jnp.float32).astype(dt)
+        return dmat, u
+
+    return MeasurementKernel(
+        name=f"dg_{variant}_k{K}_n{N}_m{M}_{dtype}",
+        fn=fn, make_args=make_args,
+        tags=dict(nelements_dg=K, nunit_nodes=N, nmatrices=M,
+                  variant=variant, dtype=dtype),
+        sizes=dict(nelements_dg=K))
+
+
+DG_DIFF = Generator(
+    "dg_diff",
+    frozenset({"dg_diff", "dg"}),
+    arg_space=dict(
+        nelements_dg=(8192, 16384, 32768, 65536),
+        nunit_nodes=(64,),
+        nmatrices=(3,),
+        variant=("basic", "u_pf", "dmat_pf", "dmat_pf_T"),
+        dtype=("float32",),
+    ),
+    build=_build_dg,
+)
+
+
+# ---- 2-D five-point stencil (paper §8.5) ------------------------------------
+
+
+def _build_stencil(*, n_grid: int, variant: str, dtype: str
+                   ) -> MeasurementKernel:
+    dt = _dtype(dtype)
+
+    if variant == "roll":
+        def fn(u):
+            return (jnp.roll(u, 1, 0) + jnp.roll(u, -1, 0)
+                    + jnp.roll(u, 1, 1) + jnp.roll(u, -1, 1) - 4.0 * u)
+    elif variant == "slice":
+        def fn(u):
+            c = u[1:-1, 1:-1]
+            return (u[:-2, 1:-1] + u[2:, 1:-1] + u[1:-1, :-2]
+                    + u[1:-1, 2:] - 4.0 * c)
+    else:
+        raise _SkipVariant
+
+    def make_args():
+        return (jax.random.normal(_key(1), (n_grid, n_grid),
+                                  jnp.float32).astype(dt),)
+
+    return MeasurementKernel(
+        name=f"stencil_{variant}_n{n_grid}_{dtype}",
+        fn=fn, make_args=make_args,
+        tags=dict(n_grid=n_grid, variant=variant, dtype=dtype),
+        sizes=dict(n_grid=n_grid))
+
+
+STENCIL = Generator(
+    "finite_diff",
+    frozenset({"finite_diff", "stencil"}),
+    arg_space=dict(
+        n_grid=(1024, 2048, 4096, 8192),
+        variant=("roll", "slice"),
+        dtype=("float32",),
+    ),
+    build=_build_stencil,
+)
+
+
+ALL_GENERATORS: List[Generator] = [
+    MATMUL_SQ, FLOPS_MADD, FLOPS_DOT, MEM_STREAM, ONCHIP, EMPTY, LOOPSTEP,
+    OVERLAP, DG_DIFF, STENCIL,
+]

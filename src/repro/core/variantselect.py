@@ -1,0 +1,88 @@
+"""Model-guided variant selection — the paper's autotuner-pruning use case.
+
+Given a calibrated cost model and a set of mathematically equivalent
+program variants, predict each variant's execution time from its
+automatically gathered features and rank them — no execution of the
+candidate variants required (paper §4: "an effective pruning strategy").
+
+``select_variant`` is what the framework itself uses to pick execution
+plans (attention lowering, MoE dispatch width, remat policy) from dry-run
+features; examples/autotune_variants.py demonstrates the user-facing flow.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.calibrate import FitResult
+from repro.core.counting import count_fn
+from repro.core.model import Model
+
+
+@dataclass
+class Variant:
+    name: str
+    fn: Callable
+    make_args: Callable[[], tuple]
+    meta: Dict = None
+
+
+@dataclass
+class RankedVariant:
+    name: str
+    predicted_time: float
+    measured_time: Optional[float] = None
+
+
+def predict_time(model: Model, params: Mapping[str, float],
+                 variant: Variant) -> float:
+    counts = count_fn(variant.fn, *variant.make_args())
+    return float(model.evaluate(params, counts))
+
+
+def rank_variants(
+    model: Model,
+    params: Mapping[str, float] | FitResult,
+    variants: Sequence[Variant],
+    *,
+    measure: bool = False,
+    trials: int = 10,
+) -> List[RankedVariant]:
+    if isinstance(params, FitResult):
+        params = params.params
+    out = []
+    for v in variants:
+        pred = predict_time(model, params, v)
+        meas = None
+        if measure:
+            from repro.core.uipick import MeasurementKernel
+
+            mk = MeasurementKernel(v.name, v.fn, v.make_args, {})
+            meas = mk.time(trials=trials)
+        out.append(RankedVariant(v.name, pred, meas))
+    return sorted(out, key=lambda r: r.predicted_time)
+
+
+def select_variant(model, params, variants) -> Variant:
+    ranked = rank_variants(model, params, variants)
+    best = ranked[0].name
+    return next(v for v in variants if v.name == best)
+
+
+def ranking_quality(ranked: Sequence[RankedVariant]) -> Dict[str, float]:
+    """Did the model rank the measured-fastest variant first?  Also returns
+    Kendall-tau-style pairwise ordering agreement."""
+    with_meas = [r for r in ranked if r.measured_time is not None]
+    if len(with_meas) < 2:
+        return {"top1_correct": 1.0, "pairwise_agreement": 1.0}
+    best_measured = min(with_meas, key=lambda r: r.measured_time)
+    top1 = 1.0 if ranked[0].name == best_measured.name else 0.0
+    agree = tot = 0
+    for i in range(len(with_meas)):
+        for j in range(i + 1, len(with_meas)):
+            a, b = with_meas[i], with_meas[j]
+            pred_order = a.predicted_time <= b.predicted_time
+            meas_order = a.measured_time <= b.measured_time
+            agree += int(pred_order == meas_order)
+            tot += 1
+    return {"top1_correct": top1, "pairwise_agreement": agree / tot}

@@ -1,0 +1,79 @@
+"""Synthetic-but-learnable data pipeline, sharded over the mesh.
+
+Deterministic per (seed, step) — restart-safe: after a checkpoint restore at
+step k the iterator regenerates exactly the batches ≥ k, so fault recovery
+replays no data and skips none (the same property a production loader gets
+from checkpointing its shard cursors).
+
+The token stream has learnable structure (a noisy affine-bigram process:
+x_{t+1} = (a·x_t + b + ε) mod V with zipf-ish resets) so the end-to-end
+training example shows a genuinely decreasing loss.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.sharding import logical_to_sharding
+
+
+@dataclass
+class SyntheticLMDataset:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    a: int = 5
+    b: int = 131
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Generate batch for a given step (host-side numpy, deterministic)."""
+        V = self.cfg.vocab_size
+        rng = np.random.default_rng((self.seed * 1_000_003 + step) & 0x7FFFFFFF)
+        B, S = self.global_batch, self.seq_len
+        if self.cfg.frontend.kind != "none" and self.cfg.encdec is None:
+            S = S - self.cfg.frontend.num_positions
+        x = np.empty((B, S + 1), np.int32)
+        x[:, 0] = rng.integers(0, V, size=B)
+        noise = (rng.random((B, S)) < 0.1)
+        jumps = rng.integers(0, V, size=(B, S))
+        for t in range(S):
+            nxt = (self.a * x[:, t] + self.b) % V
+            x[:, t + 1] = np.where(noise[:, t], jumps[:, t], nxt)
+        out = {"tokens": x[:, :-1], "targets": x[:, 1:]}
+        if self.cfg.frontend.kind != "none":
+            out["frontend"] = rng.standard_normal(
+                (B, self.cfg.frontend.num_positions,
+                 self.cfg.frontend.d_frontend)).astype(np.float32)
+        return out
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh) -> Dict[str, jax.Array]:
+    out = {}
+    for k, v in batch.items():
+        axes = ("batch",) + (None,) * (v.ndim - 1)
+        sh = logical_to_sharding(axes, mesh, dim_sizes=v.shape)
+        out[k] = jax.device_put(v, sh) if sh is not None else jnp.asarray(v)
+    return out
+
+
+def make_batch_iterator(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh=None,
+    *,
+    seed: int = 0,
+    start_step: int = 0,
+) -> Iterator[Dict[str, jax.Array]]:
+    ds = SyntheticLMDataset(cfg, shape.seq_len, shape.global_batch, seed=seed)
+    step = start_step
+    while True:
+        b = ds.batch_at(step)
+        yield shard_batch(b, mesh) if mesh is not None else \
+            {k: jnp.asarray(v) for k, v in b.items()}
+        step += 1

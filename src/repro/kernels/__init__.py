@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel module contains the raw ``pl.pallas_call`` + BlockSpec tiling;
+``ops.py`` holds the jit'd public wrappers (with interpret-mode fallback on
+CPU) and ``ref.py`` the pure-jnp oracles every kernel is validated against.
+
+Kernels:
+  * ``matmul_tiled``    — blocked matmul (the paper's running example: the
+    "prefetch into local memory" variant becomes VMEM tile staging)
+  * ``flash_attention`` — streaming-softmax attention (causal / GQA /
+    sliding window / logit softcap); removes the score-tile HBM round trips
+    that dominate the jnp lowering's memory roofline term
+  * ``mamba2_ssd``      — chunked SSD scan with VMEM-resident state
+  * ``slstm_cell``      — whole sLSTM time loop in one kernel with the
+    recurrent weights pinned in VMEM (removes the per-step HBM weight
+    re-read that dominates the xlstm prefill roofline — §Perf H3)
+  * ``stencil5``        — 2-D five-point stencil (paper §8.5 application)
+  * ``dg_diff``         — batched small-matrix DG differentiation (§8.4)
+  * ``stream`` / ``madd`` — UIPiCK measurement kernels (strided-memory and
+    peak-FLOP microbenchmarks) as genuine TPU kernels
+"""

@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Naive full-materialization softmax attention with GQA."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def ssd_ref(xdt, da, Bm, Cm):
+    """Sequential SSD recurrence: s_t = exp(da_t)·s_{t-1} + B_t ⊗ x_t;
+    y_t = C_t · s_t.  xdt: [B,S,H,P]; da: [B,S,H]; Bm/Cm: [B,S,H,N]."""
+    Bsz, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+
+    def step(s, inp):
+        x, a, b, c = inp  # [B,H,P], [B,H], [B,H,N] ×2
+        s = s * jnp.exp(a)[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", b, x)
+        y = jnp.einsum("bhn,bhpn->bhp", c, s)
+        return s, y
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (xdt.swapaxes(0, 1).astype(jnp.float32),
+          da.swapaxes(0, 1).astype(jnp.float32),
+          Bm.swapaxes(0, 1).astype(jnp.float32),
+          Cm.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(xdt.dtype)
+
+
+def stencil5_ref(u: jax.Array) -> jax.Array:
+    up = jnp.pad(u.astype(jnp.float32), ((1, 1), (1, 1)))
+    out = (up[:-2, 1:-1] + up[2:, 1:-1] + up[1:-1, :-2] + up[1:-1, 2:]
+           - 4.0 * up[1:-1, 1:-1])
+    return out.astype(u.dtype)
+
+
+def dg_diff_ref(diff_mat: jax.Array, ut: jax.Array) -> jax.Array:
+    return jnp.einsum("mij,jk->mik", diff_mat.astype(jnp.float32),
+                      ut.astype(jnp.float32)).astype(ut.dtype)
+
+
+def stream_ref(arrays, *, block: int, stride: int) -> jax.Array:
+    (S,) = arrays[0].shape
+    n_out = S // (block * stride)
+    acc = jnp.zeros((n_out * block,), jnp.float32)
+    for a in arrays:
+        blocks = a.reshape(-1, block)[::stride][:n_out]
+        acc = acc + blocks.reshape(-1).astype(jnp.float32)
+    return acc.astype(arrays[0].dtype)
+
+
+def madd_ref(x: jax.Array, *, iters: int, a: float = 1.000001,
+             b: float = 1e-7) -> jax.Array:
+    dt = x.dtype
+    xs = [x + jnp.asarray(i, dt) for i in range(8)]
+
+    def body(_, xs):
+        return [xi * jnp.asarray(a, dt) + jnp.asarray(b, dt) for xi in xs]
+
+    xs = jax.lax.fori_loop(0, iters, body, xs)
+    out = xs[0]
+    for xi in xs[1:]:
+        out = out + xi
+    return out
+
+
+def slstm_cell_ref(g_in, r_gates, b_gates):
+    """Sequential sLSTM reference (mirrors repro.models.xlstm._slstm_cell).
+
+    g_in: [B, S, 4, H, dh]; r_gates: [H, dh, 4, dh]; b_gates: [4, H, dh].
+    Returns h: [B, S, H, dh].
+    """
+    B, S, _, H, dh = g_in.shape
+
+    def step(state, g):
+        c, n, m, h = state
+        rec = jnp.einsum("bhd,hdge->bghe", h, r_gates.astype(h.dtype))
+        gg = g.astype(jnp.float32) + rec.astype(jnp.float32) \
+            + b_gates.astype(jnp.float32)[None]
+        li, lf, z_raw, o_raw = gg[:, 0], gg[:, 1], gg[:, 2], gg[:, 3]
+        lf = jax.nn.log_sigmoid(lf)
+        m_new = jnp.maximum(lf + m, li)
+        ip = jnp.exp(li - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c_new = fp * c + ip * jnp.tanh(z_raw)
+        n_new = fp * n + ip
+        h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new.astype(h.dtype)), h_new
+
+    z = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (z, z, z, jnp.zeros((B, H, dh), g_in.dtype))
+    _, hs = jax.lax.scan(step, state0, g_in.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(g_in.dtype)

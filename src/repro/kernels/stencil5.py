@@ -1,0 +1,50 @@
+"""2-D five-point stencil Pallas kernel (paper §8.5 application).
+
+The paper's two OpenCL variants differ in work-group/tile size (16×16 vs
+18×18 with halo threads idling).  On TPU the analogous knob is the VMEM
+block shape: the input stays in ANY/HBM space and each grid step DMAs a
+(bm+2)×(bn+2) halo window into registers via ``pl.load`` — halo *reads*
+overlap between neighbouring blocks (the AFR > 1 access the paper models),
+but every output element is written once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stencil_kernel(u_ref, o_ref, *, bm: int, bn: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    win = u_ref[pl.dslice(i * bm, bm + 2), pl.dslice(j * bn, bn + 2)]
+    c = win[1:-1, 1:-1]
+    out = (win[:-2, 1:-1] + win[2:, 1:-1] + win[1:-1, :-2]
+           + win[1:-1, 2:] - 4.0 * c)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def stencil5(
+    u: jax.Array,          # [M, N] — interior; result has the same shape
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    M, N = u.shape
+    bm, bn = min(block_m, M), min(block_n, N)
+    assert M % bm == 0 and N % bn == 0
+    up = jnp.pad(u, ((1, 1), (1, 1)))
+
+    kernel = functools.partial(_stencil_kernel, bm=bm, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), u.dtype),
+        interpret=interpret,
+    )(up)

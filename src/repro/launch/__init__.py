@@ -1,0 +1,1 @@
+"""Launch: production mesh construction, step factories, dry-run driver."""

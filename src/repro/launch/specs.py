@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct input specs + sharding resolution for every cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins
+for every model input of a given (architecture × input-shape) cell — no
+device allocation ever happens here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig, OptimizerConfig
+from repro.models import lm
+from repro.optim import adamw
+from repro.sharding import logical_to_pspec, tree_shardings
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def text_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Text-token length: frontend positions count toward seq_len for
+    prefix-decoder VLMs (the frontend embeddings occupy sequence slots)."""
+    if cfg.frontend.kind != "none" and cfg.encdec is None:
+        return shape.seq_len - cfg.frontend.num_positions
+    return shape.seq_len
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    St = text_len(cfg, shape)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, St), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, St), jnp.int32),
+    }
+    if cfg.frontend.kind != "none":
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend.num_positions, cfg.frontend.d_frontend),
+            jnp.dtype(cfg.activation_dtype),
+        )
+    return out
+
+
+def batch_axes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    out = {
+        "tokens": ("batch", "seq"),
+        "targets": ("batch", "seq"),
+    }
+    if cfg.frontend.kind != "none":
+        out["frontend"] = ("batch", "seq", "frontend")
+    return out
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape):
+    b = train_batch_specs(cfg, shape)
+    del b["targets"]
+    return b
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "cur_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def shardings_for(tree_axes, tree_specs, mesh):
+    """Resolve logical-axis trees to NamedShardings (divisibility-guarded)."""
+    return tree_shardings(tree_axes, tree_specs, mesh=mesh)
+
+
+def scalar_sharding(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,93 @@
+"""Step factories: train_step (with gradient accumulation), prefill, decode.
+
+These are the functions the dry-run lowers and the real trainer executes —
+one definition for both paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import lm
+from repro.optim import adamw
+
+
+def make_loss_fn(run: RunConfig):
+    cfg = run.model
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(
+            params, cfg, batch, remat=run.remat, attn_impl=run.attn_impl,
+            moe_impl=run.moe_impl)
+
+    return loss_fn
+
+
+def make_train_step(run: RunConfig):
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    With ``run.microbatches > 1`` the global batch is split along axis 0 and
+    gradients are accumulated with a ``lax.scan`` (accumulator kept in the
+    parameter dtype; the cross-replica reduction XLA inserts in backward is
+    therefore bf16 — the wire-compression default)."""
+    cfg = run.model
+    loss_fn = make_loss_fn(run)
+    M = run.microbatches
+
+    def train_step(params, opt_state, batch):
+        if M == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+
+            def body(acc, one):
+                (l, mtr), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, one)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     acc_g, g)
+                return (acc_g, acc_l + l), mtr
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (grads, loss_sum), mtr_stack = jax.lax.scan(
+                body, (zeros, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = loss_sum / M
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), mtr_stack)
+
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, run.optimizer)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(run: RunConfig):
+    cfg = run.model
+
+    def prefill_step(params, cache, batch):
+        return lm.prefill(params, cfg, cache, batch, attn_impl=run.attn_impl,
+                          q_chunk=run.q_chunk, kv_chunk=run.kv_chunk,
+                          moe_impl=run.moe_impl)
+
+    return prefill_step
+
+
+def make_decode_step(run: RunConfig):
+    cfg = run.model
+
+    def decode_step(params, cache, tokens, cur_index):
+        return lm.decode_step(params, cfg, cache, tokens, cur_index,
+                              moe_impl=run.moe_impl)
+
+    return decode_step

@@ -1,0 +1,60 @@
+"""Production training launcher: ``--arch <id> --shape train_4k``.
+
+On real hardware this process runs once per host (jax.distributed
+initializes from the cluster env); in this container it drives the same
+code on the local device(s).  For the 256/512-chip compile-only check use
+``repro.launch.dryrun`` instead.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 20 --seq-len 64 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import InputShape, OptimizerConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.presets import make_run_config
+from repro.runtime import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    run = make_run_config(args.arch, args.shape, model_config=cfg)
+    if args.seq_len or args.batch:
+        shape = InputShape(
+            "cli",
+            seq_len=args.seq_len or run.shape.seq_len,
+            global_batch=args.batch or run.shape.global_batch,
+            kind="train")
+        run = run.replace(shape=shape, microbatches=1)
+    run = run.replace(
+        checkpoint_dir=args.ckpt_dir,
+        optimizer=OptimizerConfig(total_steps=args.steps, warmup_steps=max(
+            args.steps // 10, 1)))
+
+    mesh = make_host_mesh(model=args.model_parallel)
+    print(f"arch={cfg.name} params={cfg.param_count() / 1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+    trainer = Trainer(run, mesh=mesh)
+    state = trainer.restore_or_init()
+    state = trainer.train(state, args.steps, log_every=10)
+    trainer.save(state, blocking=True)
+    print(f"done at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

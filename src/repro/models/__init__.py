@@ -1,0 +1,1 @@
+"""Model library: composable JAX layer definitions for the assigned archs."""

@@ -1,0 +1,682 @@
+"""Core layer definitions: norms, RoPE, attention (GQA / local / MLA), MLPs.
+
+Design rules
+------------
+* Pure functions; parameters are nested dicts produced from ``ParamSpec``
+  schemas (see ``repro.models.param``), so shape, logical sharding axes and
+  initialization live in one place.
+* Every block is *residual-complete*: ``apply_*`` returns the full
+  ``x + f(norm(x))`` value so the LM assembly simply chains blocks.
+* Attention for train/prefill uses a blockwise (flash-style) streaming
+  softmax in pure jnp — scores for a (q-chunk × kv-chunk) tile only — so the
+  32k-prefill cells fit in memory without a Pallas dependency.  The Pallas
+  flash kernel in ``repro.kernels.flash_attention`` is the TPU-optimized
+  variant of the exact same contraction.
+* Softmax statistics are computed in float32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, ModelConfig
+from repro.models.param import ParamSpec
+from repro.sharding import shard_act
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Context threaded through every block
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Ctx:
+    cfg: ModelConfig
+    mode: str                      # train | prefill | decode
+    positions: jax.Array           # [B, S] absolute positions of the inputs
+    cur_index: Optional[jax.Array] = None  # scalar: cache write offset (decode)
+    enc_out: Optional[jax.Array] = None    # [B, T_enc, D] for cross-attention
+    attn_impl: str = "chunked_scan"        # chunked_scan | chunked_tri
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    moe_impl: str = "scatter"              # scatter | a2a (shard_map EP path)
+
+    @property
+    def adt(self):
+        return jnp.dtype(self.cfg.activation_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_schema(cfg: ModelConfig, dim: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = dim or cfg.d_model
+    if cfg.norm == "layer":
+        return {
+            "scale": ParamSpec((d,), ("norm",), init="ones"),
+            "bias": ParamSpec((d,), ("norm",), init="zeros"),
+        }
+    return {"scale": ParamSpec((d,), ("norm",), init="ones")}
+
+
+def apply_norm(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def rmsnorm_simple(x: jax.Array, scale: jax.Array) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D] (D even), positions: [B, S] → rotated x."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """Whisper-style sinusoidal position embeddings. positions: [B,S] → [B,S,d]."""
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention in pure jnp
+# ---------------------------------------------------------------------------
+
+
+def _softcap(s: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def _tile_scores(qc, kc, *, scale, softcap):
+    """qc: [B, ql, Hkv, G, D], kc: [B, kl, Hkv, D] → [B, Hkv, G, ql, kl] f32."""
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qc, kc, preferred_element_type=jnp.float32
+    )
+    return _softcap(s * scale, softcap)
+
+
+def _tile_mask(qpos, kpos, *, causal, window):
+    """qpos: [ql], kpos: [kl] → bool [ql, kl] (True = attend)."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    impl: str = "chunked_scan",
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Streaming-softmax attention.
+
+    q: [B, Sq, Hq, Dk]; k: [B, Skv, Hkv, Dk]; v: [B, Skv, Hkv, Dv].
+    GQA: Hq = G * Hkv.  Returns [B, Sq, Hq, Dv].
+
+    ``impl``:
+      * "chunked_scan" — scan over q-chunks with an inner scan over *all*
+        kv-chunks (baseline; causal masking discards ~half the tile work).
+      * "chunked_tri"  — python-unrolled q-chunk loop where the inner scan
+        only visits kv-chunks that can be unmasked (triangle-aware;
+        beyond-paper §Perf optimization).
+    """
+    B, Sq, Hq, Dk = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+
+    # pad ragged sequence lengths up to a chunk multiple; padded key
+    # positions are masked out below via the kv_len bound
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    Sq_orig, Skv_orig = Sq, Skv
+    if Sq % q_chunk:
+        pad = q_chunk - Sq % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sq += pad
+    if Skv % kv_chunk:
+        pad = kv_chunk - Skv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Skv += pad
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, Dk)
+    kr = k.reshape(B, nk, kv_chunk, Hkv, Dk)
+    vr = v.reshape(B, nk, kv_chunk, Hkv, Dv)
+    kpos_all = jnp.arange(Skv).reshape(nk, kv_chunk)
+
+    def q_chunk_body(qi, qc):
+        """Attend one q-chunk against kv-chunks [0, nk_visible)."""
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, inp):
+            m_run, l_run, acc = carry
+            kc, vc, kpos = inp
+            s = _tile_scores(qc, kc, scale=scale, softcap=softcap)
+            mask = _tile_mask(qpos, kpos, causal=causal, window=window)
+            mask &= (kpos < Skv_orig)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            # fully-masked tiles: s == m_new == NEG_INF would give p = 1
+            p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dv), jnp.float32)
+
+        if isinstance(qi, int):  # chunked_tri: static triangle bound
+            nk_vis = nk if not causal else min(
+                nk, (q_offset + (qi + 1) * q_chunk + kv_chunk - 1) // kv_chunk
+            )
+            xs = (kr[:, :nk_vis].swapaxes(0, 1), vr[:, :nk_vis].swapaxes(0, 1),
+                  kpos_all[:nk_vis])
+        else:
+            xs = (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kpos_all)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), xs)
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return out  # [B, Hkv, G, qc, Dv]
+
+    if impl == "chunked_tri":
+        outs = [q_chunk_body(qi, qr[:, qi]) for qi in range(nq)]
+        out = jnp.stack(outs, axis=1)  # [B, nq, Hkv, G, qc, Dv]
+    else:
+        out = jax.lax.map(
+            lambda args: q_chunk_body(args[0], args[1]),
+            (jnp.arange(nq), qr.swapaxes(0, 1)),
+        )  # [nq, B, Hkv, G, qc, Dv]
+        out = out.swapaxes(0, 1)
+    out = out.transpose(0, 1, 4, 2, 3, 5)  # [B, nq, qc, Hkv, G, Dv]
+    return out.reshape(B, Sq, Hq, Dv)[:, :Sq_orig]
+
+
+def decode_attention_at_positions(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    slot_positions: jax.Array,
+    cur_index: jax.Array,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention over a ring-buffer cache whose slot ``s`` holds the
+    token at absolute position ``slot_positions[s]`` (< 0 ⇒ empty)."""
+    B, _, Hq, Dk = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+    qr = q.reshape(B, Hkv, G, Dk)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qr, k_cache, preferred_element_type=jnp.float32
+    )
+    s = _softcap(s * scale, softcap)
+    valid = (slot_positions >= 0) & (slot_positions <= cur_index)
+    if window is not None:
+        valid &= slot_positions > cur_index - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_index: jax.Array,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly sequence-sharded) cache.
+
+    q: [B, 1, Hq, Dk]; caches: [B, S, Hkv, D*]; cur_index: scalar — the
+    position of the *current* token (entries at s > cur_index are masked).
+    """
+    B, _, Hq, Dk = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+    qr = q.reshape(B, Hkv, G, Dk)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qr, k_cache, preferred_element_type=jnp.float32
+    )
+    s = _softcap(s * scale, softcap)
+    pos = jnp.arange(S)
+    valid = pos <= cur_index
+    if window is not None:
+        valid &= pos > cur_index - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sub-block (full / local), with KV cache plumbing
+# ---------------------------------------------------------------------------
+
+
+def attn_schema(cfg: ModelConfig, a: Optional[AttentionConfig] = None) -> Dict:
+    a = a or cfg.attention
+    D = cfg.d_model
+    return {
+        "wq": ParamSpec((D, a.num_heads, a.head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((D, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((a.num_heads, a.head_dim, D), ("heads", "head_dim", "embed")),
+    }
+
+
+def attn_cache_schema(cfg: ModelConfig, batch: int, seq: int,
+                      a: Optional[AttentionConfig] = None,
+                      local: bool = False) -> Dict:
+    """KV cache buffers.  Local (sliding-window) layers allocate a
+    ring buffer of ``window`` slots instead of the full sequence."""
+    a = a or cfg.attention
+    if local and a.window:
+        seq = min(seq, a.window)
+    shp = (batch, seq, a.num_kv_heads, a.head_dim)
+    axes = ("batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "k": ParamSpec(shp, axes, init="zeros"),
+        "v": ParamSpec(shp, axes, init="zeros"),
+    }
+
+
+def apply_attn(
+    p: Dict,
+    x: jax.Array,
+    ctx: Ctx,
+    cache: Optional[Dict] = None,
+    *,
+    window: Optional[int] = None,
+    a: Optional[AttentionConfig] = None,
+    kv_x: Optional[jax.Array] = None,
+    causal: Optional[bool] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Attention sub-block (no norm / residual).  Returns (out, new_cache).
+
+    ``kv_x`` switches to cross-attention (keys/values from the encoder);
+    cross K/V are computed during prefill and then read from the cache.
+    """
+    cfg = ctx.cfg
+    a = a or cfg.attention
+    causal = a.causal if causal is None else causal
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q = shard_act(q, "batch", "seq", "act_heads", None)
+    if a.use_rope:
+        q = apply_rope(q, ctx.positions, a.rope_theta)
+
+    if ctx.mode == "decode" and kv_x is None:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if a.use_rope:
+            k_new = apply_rope(k_new, ctx.positions, a.rope_theta)
+        S_c = cache["k"].shape[1]
+        ring = window is not None and S_c == min(window, S_c)  # ring buffer
+        write_at = jax.lax.rem(ctx.cur_index, S_c) if ring else ctx.cur_index
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), write_at, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), write_at, axis=1
+        )
+        if ring:
+            # slot s holds absolute position cur − ((cur − s) mod S_c)
+            slots = jnp.arange(S_c)
+            abs_pos = ctx.cur_index - jax.lax.rem(
+                ctx.cur_index - slots + S_c * 8, S_c)
+            out = decode_attention_at_positions(
+                q, k_cache, v_cache, abs_pos, ctx.cur_index,
+                window=window, softcap=a.logit_softcap,
+            )
+        else:
+            out = decode_attention(
+                q, k_cache, v_cache, ctx.cur_index,
+                window=window, softcap=a.logit_softcap,
+            )
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        src = kv_x if kv_x is not None else x
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+        if a.use_rope and kv_x is None:
+            k = apply_rope(k, ctx.positions, a.rope_theta)
+        out = blockwise_attention(
+            q, k, v,
+            causal=causal and kv_x is None,
+            window=window,
+            softcap=a.logit_softcap,
+            q_chunk=ctx.q_chunk,
+            kv_chunk=ctx.kv_chunk,
+            impl=ctx.attn_impl,
+        ).astype(x.dtype)
+        new_cache = None
+        if cache is not None:  # prefill: persist K/V into the cache buffers
+            S_c = cache["k"].shape[1]
+            S_in = k.shape[1]
+
+            def store(buf, val):
+                if S_in <= S_c:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        buf, val.astype(buf.dtype), 0, axis=1)
+                # ring buffer smaller than the prompt: keep the trailing
+                # window, rotated so slot s holds position p with p % S_c == s
+                tail = val[:, -S_c:].astype(buf.dtype)
+                return jnp.roll(tail, S_in % S_c, axis=1)
+
+            new_cache = {"k": store(cache["k"], k),
+                         "v": store(cache["v"], v)}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_act(y, "batch", "seq", "act_embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_schema(cfg: ModelConfig) -> Dict:
+    a = cfg.attention
+    D, H = cfg.d_model, a.num_heads
+    r_kv, r_q = a.kv_lora_rank, a.q_lora_rank
+    dn, dr, dv = a.qk_nope_head_dim, a.qk_rope_head_dim, a.v_head_dim
+    return {
+        "wq_a": ParamSpec((D, r_q), ("embed", "lora")),
+        "q_norm": ParamSpec((r_q,), ("norm",), init="ones"),
+        "wq_b": ParamSpec((r_q, H, dn + dr), ("lora", "heads", "qk_dim")),
+        "wkv_a": ParamSpec((D, r_kv), ("embed", "lora")),
+        "kv_norm": ParamSpec((r_kv,), ("norm",), init="ones"),
+        "wk_rope": ParamSpec((D, dr), ("embed", "qk_dim")),
+        "wk_b": ParamSpec((r_kv, H, dn), ("lora", "heads", "qk_dim")),
+        "wv_b": ParamSpec((r_kv, H, dv), ("lora", "heads", "head_dim")),
+        "wo": ParamSpec((H, dv, D), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_cache_schema(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    a = cfg.attention
+    return {
+        "ckv": ParamSpec((batch, seq, a.kv_lora_rank), ("batch", "kv_seq", "lora"),
+                         init="zeros"),
+        "krope": ParamSpec((batch, seq, a.qk_rope_head_dim),
+                           ("batch", "kv_seq", "qk_dim"), init="zeros"),
+    }
+
+
+def apply_mla(
+    p: Dict, x: jax.Array, ctx: Ctx, cache: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict]]:
+    cfg = ctx.cfg
+    a = cfg.attention
+    B, S, D = x.shape
+    H = a.num_heads
+    dn, dr, dv = a.qk_nope_head_dim, a.qk_rope_head_dim, a.v_head_dim
+
+    # --- queries (low-rank) ---------------------------------------------
+    cq = rmsnorm_simple(x @ p["wq_a"].astype(x.dtype), p["q_norm"])
+    qs = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = qs[..., :dn], qs[..., dn:]
+    q_rope = apply_rope(q_rope, ctx.positions, a.rope_theta)
+
+    # --- compressed KV ----------------------------------------------------
+    ckv_new = rmsnorm_simple(x @ p["wkv_a"].astype(x.dtype), p["kv_norm"])
+    krope_new = apply_rope(
+        (x @ p["wk_rope"].astype(x.dtype))[:, :, None, :], ctx.positions,
+        a.rope_theta,
+    )[:, :, 0, :]
+
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if ctx.mode == "decode":
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), ctx.cur_index, 1
+        )
+        krope = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope_new.astype(cache["krope"].dtype), ctx.cur_index, 1
+        )
+        # Absorbed decode: fold W_uk into the query; attend in latent space.
+        q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(x.dtype))
+        s = jnp.einsum("bshr,btr->bhst", q_eff, ckv,
+                       preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bshk,btk->bhst", q_rope, krope,
+                           preferred_element_type=jnp.float32)
+        pos = jnp.arange(ckv.shape[1])
+        s = jnp.where((pos <= ctx.cur_index)[None, None, None], s * scale, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", w.astype(x.dtype), ckv)
+        out = jnp.einsum("bshr,rhk->bshk", ctx_lat, p["wv_b"].astype(x.dtype))
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        k_nope = jnp.einsum("btr,rhk->bthk", ckv_new, p["wk_b"].astype(x.dtype))
+        v = jnp.einsum("btr,rhk->bthk", ckv_new, p["wv_b"].astype(x.dtype))
+        k_rope_b = jnp.broadcast_to(krope_new[:, :, None, :], (B, S, H, dr))
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        out = blockwise_attention(
+            q_full, k_full, v, causal=True, scale=scale,
+            q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk, impl=ctx.attn_impl,
+        ).astype(x.dtype)
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], ckv_new.astype(cache["ckv"].dtype), 0, 1),
+                "krope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["krope"], krope_new.astype(cache["krope"].dtype), 0, 1),
+            }
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_act(y, "batch", "seq", "act_embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation.endswith("_glu"):
+        return {
+            "w_gate": ParamSpec((D, F), ("embed", "ff")),
+            "w_up": ParamSpec((D, F), ("embed", "ff")),
+            "w_down": ParamSpec((F, D), ("ff", "embed")),
+        }
+    return {
+        "w_up": ParamSpec((D, F), ("embed", "ff")),
+        "w_down": ParamSpec((F, D), ("ff", "embed")),
+    }
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name.startswith("silu"):
+        return jax.nn.silu(x)
+    if name.startswith("gelu"):
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def apply_mlp(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    up = x @ p["w_up"].astype(x.dtype)
+    up = shard_act(up, "batch", "seq", "act_ff")
+    if cfg.activation.endswith("_glu"):
+        gate = _act(cfg.activation, x @ p["w_gate"].astype(x.dtype))
+        h = gate * up
+    else:
+        h = _act(cfg.activation, up)
+    y = h @ p["w_down"].astype(x.dtype)
+    return shard_act(y, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Standard transformer blocks (attn + MLP), local variant, cross-attn variant
+# ---------------------------------------------------------------------------
+
+
+def _maybe_post_norm(cfg: ModelConfig):
+    return bool(dict(cfg.extra).get("post_norm", False))
+
+
+def attn_mlp_schema(cfg: ModelConfig, *, local: bool = False,
+                    cross: bool = False) -> Dict:
+    sch = {
+        "ln_attn": norm_schema(cfg),
+        "attn": mla_schema(cfg) if cfg.attention.kind == "mla" else attn_schema(cfg),
+        "ln_mlp": norm_schema(cfg),
+        "mlp": mlp_schema(cfg),
+    }
+    if cross:
+        sch["ln_cross"] = norm_schema(cfg)
+        sch["cross"] = attn_schema(cfg)
+    if _maybe_post_norm(cfg):
+        sch["ln_attn_post"] = norm_schema(cfg)
+        sch["ln_mlp_post"] = norm_schema(cfg)
+    return sch
+
+
+def attn_mlp_cache_schema(cfg: ModelConfig, batch: int, seq: int, *,
+                          cross: bool = False, local: bool = False) -> Dict:
+    if cfg.attention.kind == "mla":
+        out = {"attn": mla_cache_schema(cfg, batch, seq)}
+    else:
+        out = {"attn": attn_cache_schema(cfg, batch, seq, local=local)}
+    if cross:
+        enc_len = cfg.encdec.encoder_positions if cfg.encdec else 0
+        out["cross"] = attn_cache_schema(cfg, batch, enc_len)
+    return out
+
+
+def apply_attn_mlp(
+    p: Dict,
+    x: jax.Array,
+    ctx: Ctx,
+    cache: Optional[Dict] = None,
+    *,
+    local: bool = False,
+    cross: bool = False,
+    causal: Optional[bool] = None,
+) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    cfg = ctx.cfg
+    window = cfg.attention.window if local else None
+    post = _maybe_post_norm(cfg)
+    new_cache: Dict = {}
+
+    h = apply_norm(p["ln_attn"], cfg, x)
+    if cfg.attention.kind == "mla":
+        y, c = apply_mla(p["attn"], h, ctx, cache.get("attn") if cache else None)
+    else:
+        y, c = apply_attn(
+            p["attn"], h, ctx, cache.get("attn") if cache else None,
+            window=window, causal=causal,
+        )
+    if c is not None:
+        new_cache["attn"] = c
+    if post:
+        y = apply_norm(p["ln_attn_post"], cfg, y)
+    x = x + y
+
+    if cross:
+        h = apply_norm(p["ln_cross"], cfg, x)
+        if ctx.mode == "decode":
+            # Cross K/V are static after prefill; read straight from cache.
+            ccache = cache["cross"]
+            q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"].astype(h.dtype))
+            out = decode_attention(
+                q, ccache["k"], ccache["v"],
+                jnp.asarray(ccache["k"].shape[1] - 1, jnp.int32),
+            )
+            y = jnp.einsum("bshk,hkd->bsd", out, p["cross"]["wo"].astype(h.dtype))
+            new_cache["cross"] = ccache
+        else:
+            y, c = apply_attn(
+                p["cross"], h, ctx, cache.get("cross") if cache else None,
+                kv_x=ctx.enc_out, causal=False,
+            )
+            if c is not None:
+                new_cache["cross"] = c
+        x = x + y
+
+    h = apply_norm(p["ln_mlp"], cfg, x)
+    y = apply_mlp(p["mlp"], cfg, h)
+    if post:
+        y = apply_norm(p["ln_mlp_post"], cfg, y)
+    x = x + y
+    return x, (new_cache if cache is not None else None), {}

@@ -1,0 +1,347 @@
+"""LM assembly: schema → init → forward / loss / prefill / decode.
+
+One generic assembly covers all ten assigned architectures:
+
+  * decoder-only dense / MoE / hybrid / SSM stacks (scan over groups)
+  * zamba2-style *shared* attention block re-invoked every group
+  * whisper-style encoder-decoder (separate bidirectional encoder stack)
+  * modality frontends as stubs (precomputed embeddings, projected in)
+
+The scanned body keeps the HLO size O(pattern), not O(layers); activation
+checkpointing (remat) wraps the scan body in training mode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.blocks import BLOCKS, aux_keys, effective_pattern, effective_prefix
+from repro.models.param import (
+    ParamSpec,
+    abstract_tree,
+    axes_tree,
+    init_stacked,
+    init_tree,
+    stack_schema,
+)
+from repro.sharding import shard_act
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab_size // 128) * 128
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+
+def _group_schema(cfg: ModelConfig) -> Dict:
+    return {
+        f"b{i}": BLOCKS[bid].schema(cfg)
+        for i, bid in enumerate(effective_pattern(cfg))
+    }
+
+
+def model_schema(cfg: ModelConfig) -> Dict:
+    V, D = padded_vocab(cfg), cfg.d_model
+    sch: Dict[str, Any] = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), init="small_normal"),
+        "final_norm": layers.norm_schema(cfg),
+    }
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = ParamSpec((D, V), ("embed", "vocab"))
+    if cfg.frontend.kind != "none":
+        sch["frontend_proj"] = ParamSpec(
+            (cfg.frontend.d_frontend, D), ("frontend", "embed"))
+    for i, bid in enumerate(effective_prefix(cfg)):
+        sch[f"prefix_{i}"] = BLOCKS[bid].schema(cfg)
+    sch["body"] = stack_schema(_group_schema(cfg), cfg.num_groups)
+    if cfg.shared_attn_every:
+        sch["shared_attn"] = layers.attn_mlp_schema(cfg)
+    if cfg.encdec is not None:
+        enc_group = {"b0": BLOCKS["bidir_attn_mlp"].schema(cfg)}
+        sch["encoder"] = {
+            "body": stack_schema(enc_group, cfg.encdec.num_encoder_layers),
+            "final_norm": layers.norm_schema(cfg),
+        }
+    return sch
+
+
+def cache_schema(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    """KV / state cache buffers for serving at max length ``seq``."""
+    pattern = effective_pattern(cfg)
+    group: Dict[str, Any] = {}
+    if cfg.shared_attn_every:
+        group["shared"] = layers.attn_mlp_cache_schema(cfg, batch, seq)
+    for i, bid in enumerate(pattern):
+        c = BLOCKS[bid].cache_schema(cfg, batch, seq)
+        if c:
+            group[f"b{i}"] = c
+    out: Dict[str, Any] = {"body": stack_schema(group, cfg.num_groups)}
+    for i, bid in enumerate(effective_prefix(cfg)):
+        c = BLOCKS[bid].cache_schema(cfg, batch, seq)
+        if c:
+            out[f"prefix_{i}"] = c
+    return out
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Dict:
+    """Materialize parameters (smoke tests / the 100M example trainer)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    sch = model_schema(cfg)
+    body = sch.pop("body")
+    out = init_tree(key, sch, dtype)
+    out["body"] = init_stacked(
+        jax.random.fold_in(key, 7), _group_schema(cfg), cfg.num_groups, dtype)
+    sch["body"] = body
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_tree(model_schema(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_axes(cfg: ModelConfig):
+    return axes_tree(model_schema(cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int):
+    return abstract_tree(cache_schema(cfg, batch, seq),
+                         jnp.dtype(cfg.activation_dtype))
+
+
+def cache_axes(cfg: ModelConfig, batch: int, seq: int):
+    return axes_tree(cache_schema(cfg, batch, seq))
+
+
+def zero_cache(cfg: ModelConfig, batch: int, seq: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        abstract_cache(cfg, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = params["embed"][tokens]  # gather [B,S,D]
+    if dict(cfg.extra).get("embed_scale", False):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x.astype(jnp.dtype(cfg.activation_dtype))
+
+
+def _head(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard_act(logits, "batch", "seq", "vocab")
+
+
+def _run_encoder(params, cfg: ModelConfig, frames: jax.Array,
+                 ctx_proto: layers.Ctx) -> jax.Array:
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    enc = params["encoder"]
+    B, T, _ = frames.shape
+    x = frames @ params["frontend_proj"].astype(frames.dtype)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x = x + layers.sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+    ctx = layers.Ctx(cfg=cfg, mode="train", positions=pos,
+                     attn_impl=ctx_proto.attn_impl,
+                     q_chunk=ctx_proto.q_chunk, kv_chunk=ctx_proto.kv_chunk)
+
+    def body(carry, gp):
+        y, _, _ = BLOCKS["bidir_attn_mlp"].apply(gp["b0"], carry, ctx, None)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, enc["body"])
+    return layers.apply_norm(enc["final_norm"], cfg, x)
+
+
+def _apply_group(gp, x, ctx: layers.Ctx, gcache, shared_params, cfg: ModelConfig,
+                 ak: Tuple[str, ...]):
+    new_cache: Dict = {}
+    aux = {k: jnp.float32(0) for k in ak}
+    if cfg.shared_attn_every:
+        c = gcache.get("shared") if gcache else None
+        x, cs, _ = layers.apply_attn_mlp(shared_params, x, ctx, c)
+        if cs is not None:
+            new_cache["shared"] = cs
+    for i, bid in enumerate(effective_pattern(ctx.cfg)):
+        c = gcache.get(f"b{i}") if gcache else None
+        x, ci, a = BLOCKS[bid].apply(gp[f"b{i}"], x, ctx, c)
+        if ci is not None:
+            new_cache[f"b{i}"] = ci
+        for k, v in a.items():
+            aux[k] = aux[k] + v
+    return x, (new_cache or None), aux
+
+
+def _remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    mode: str = "train",
+    cache: Optional[Dict] = None,
+    cur_index: Optional[jax.Array] = None,
+    remat: str = "full",
+    attn_impl: str = "chunked_scan",
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    moe_impl: str = "scatter",
+) -> Tuple[jax.Array, Dict, Optional[Dict]]:
+    """Returns (logits, aux, new_cache).
+
+    batch keys: "tokens" [B,St]; optional "frontend" [B,P,Df] (vlm prefix
+    embeddings or whisper frames).  In decode mode tokens is [B,1] and
+    ``cur_index`` is the write position.
+    """
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    ak = aux_keys(cfg)
+
+    enc_out = None
+    if cfg.encdec is not None and mode != "decode":
+        # decode reads cross K/V from the cache; the encoder runs at prefill
+        enc_out = _run_encoder(
+            params, cfg, batch["frontend"],
+            layers.Ctx(cfg=cfg, mode=mode, positions=jnp.zeros((1, 1), jnp.int32),
+                       attn_impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk))
+
+    x = _embed(params, cfg, tokens)
+    n_front = 0
+    if cfg.frontend.kind != "none" and cfg.encdec is None and mode != "decode":
+        fe = batch["frontend"]
+        fe = fe @ params["frontend_proj"].astype(fe.dtype)
+        n_front = fe.shape[1]
+        x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+
+    S = x.shape[1]
+    if mode == "decode":
+        positions = jnp.broadcast_to(cur_index, (B, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+
+    if cfg.encdec is not None and not cfg.attention.use_rope:
+        x = x + layers.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+    x = shard_act(x, "batch", "seq", "act_embed")
+    ctx = layers.Ctx(cfg=cfg, mode=mode, positions=positions,
+                     cur_index=cur_index, enc_out=enc_out,
+                     attn_impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                     moe_impl=moe_impl)
+
+    aux = {k: jnp.float32(0) for k in ak}
+    new_cache: Dict = {}
+
+    # ----- prefix blocks (unscanned) --------------------------------------
+    for i, bid in enumerate(effective_prefix(cfg)):
+        c = cache.get(f"prefix_{i}") if cache else None
+        x, ci, a = BLOCKS[bid].apply(params[f"prefix_{i}"], x, ctx, c)
+        if ci is not None:
+            new_cache[f"prefix_{i}"] = ci
+        for k, v in a.items():
+            aux[k] = aux[k] + v
+
+    # ----- scanned body ----------------------------------------------------
+    shared_params = params.get("shared_attn")
+
+    def body(carry, xs):
+        xc, aux_c = carry
+        gp, gc = xs
+        xo, gc_new, a = _apply_group(gp, xc, ctx, gc, shared_params, cfg, ak)
+        aux_c = {k: aux_c[k] + a[k] for k in ak}
+        return (xo, aux_c), gc_new
+
+    body_fn = _remat_wrap(body, remat if mode == "train" else "none")
+    body_cache = cache.get("body") if cache else None
+    xs = (params["body"], body_cache) if body_cache is not None \
+        else (params["body"], None)
+    if body_cache is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, gp: body_fn(c, (gp, None)), (x, aux), params["body"])
+    else:
+        (x, aux), body_cache_new = jax.lax.scan(body_fn, (x, aux), xs)
+        new_cache["body"] = body_cache_new
+
+    x = layers.apply_norm(params["final_norm"], cfg, x)
+    if n_front and mode != "decode":
+        x = x[:, n_front:]  # logits only over text positions
+    logits = _head(params, cfg, x)
+    return logits, aux, (new_cache or None)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, remat: str = "full",
+            attn_impl: str = "chunked_scan",
+            moe_impl: str = "scatter") -> Tuple[jax.Array, Dict]:
+    logits, aux, _ = forward(params, cfg, batch, mode="train", remat=remat,
+                             attn_impl=attn_impl, moe_impl=moe_impl)
+    targets = batch["targets"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    nll = jnp.sum((logz - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll
+    metrics = {"nll": nll, **aux}
+    if "moe_aux_loss" in aux:
+        loss = loss + aux["moe_aux_loss"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, cache, batch, *,
+            attn_impl: str = "chunked_scan", q_chunk: int = 512,
+            kv_chunk: int = 1024, moe_impl: str = "scatter"):
+    """Forward the full prompt, filling the cache.  Returns (cache, logits)."""
+    logits, _, new_cache = forward(
+        params, cfg, batch, mode="prefill", cache=cache,
+        attn_impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        moe_impl=moe_impl)
+    return new_cache, logits[:, -1:]
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_index, *,
+                batch_extras: Optional[Dict] = None,
+                moe_impl: str = "scatter"):
+    """One token step.  tokens: [B,1]; cur_index: scalar int32 position."""
+    batch = {"tokens": tokens}
+    if batch_extras:
+        batch.update(batch_extras)
+    logits, _, new_cache = forward(
+        params, cfg, batch, mode="decode", cache=cache, cur_index=cur_index,
+        moe_impl=moe_impl)
+    return new_cache, logits

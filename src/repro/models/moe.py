@@ -1,0 +1,179 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch (GShard-style).
+
+Expert parallelism: the expert axis of every expert parameter maps to the
+"model" mesh axis (see ``repro.sharding.axes``), and the dispatch buffers
+``[E, C, d]`` shard E → model and C → (pod, data), so the dispatch/combine
+scatter-gathers lower to all-to-all style collectives under pjit.
+
+Dispatch algorithm (differentiable, fully static shapes):
+  1. router logits → softmax (float32) → top-k gates + expert ids
+  2. flatten to ``T*k`` assignments, stable-sort by expert id
+  3. rank within expert via ``searchsorted``; drop ranks ≥ capacity
+  4. scatter kept tokens into ``[E*C, d]`` buffers, run experts batched,
+  5. gather back and combine with gate weights.
+
+Aux loss: Switch-style load-balancing loss (mean router prob × mean
+assignment fraction × E).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.param import ParamSpec
+from repro.models import layers
+from repro.sharding import shard_act
+
+
+def _capacity(num_tokens: int, m: MoEConfig) -> int:
+    c = int(num_tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    # round up to a lane-friendly multiple
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_schema(cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    sch: Dict = {
+        "router": ParamSpec((D, E), ("embed", None), init="small_normal"),
+        "w_gate": ParamSpec((E, D, F), ("experts", "embed", "expert_ff")),
+        "w_up": ParamSpec((E, D, F), ("experts", "embed", "expert_ff")),
+        "w_down": ParamSpec((E, F, D), ("experts", "expert_ff", "embed")),
+    }
+    if m.num_shared_experts > 0:
+        fs = m.d_ff_shared * m.num_shared_experts
+        sch["shared"] = {
+            "w_gate": ParamSpec((D, fs), ("embed", "ff")),
+            "w_up": ParamSpec((D, fs), ("embed", "ff")),
+            "w_down": ParamSpec((fs, D), ("ff", "embed")),
+        }
+    if m.dense_residual_d_ff > 0:
+        sch["dense"] = {
+            "w_gate": ParamSpec((D, m.dense_residual_d_ff), ("embed", "ff")),
+            "w_up": ParamSpec((D, m.dense_residual_d_ff), ("embed", "ff")),
+            "w_down": ParamSpec((m.dense_residual_d_ff, D), ("ff", "embed")),
+        }
+    return sch
+
+
+def apply_moe(p: Dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x: [B, S, D] → (y, aux).  aux carries the load-balancing loss."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    C = _capacity(T, m)
+    xf = x.reshape(T, D)
+
+    # ----- routing (float32) ---------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    gate_vals, eidx = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Switch-style aux loss.
+    me = jnp.mean(probs, axis=0)                       # mean router prob [E]
+    assign = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=1), axis=0
+    )                                                  # fraction routed [E]
+    aux_loss = E * jnp.sum(me * assign)
+
+    # ----- sort-based dispatch -------------------------------------------
+    e_flat = eidx.reshape(-1)                          # [T*K]
+    t_flat = jnp.repeat(jnp.arange(T), K)              # token id per slot
+    g_flat = gate_vals.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    t_sorted = t_flat[order]
+    g_sorted = g_flat[order]
+    start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")  # [E]
+    rank = jnp.arange(T * K) - start[e_sorted]
+    keep = rank < C
+    slot = jnp.where(keep, e_sorted * C + rank, E * C)  # E*C = dropped bin
+
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    buf = buf.at[slot].add(xf[t_sorted].astype(x.dtype))
+    buf = buf[: E * C].reshape(E, C, D)
+    buf = shard_act(buf, "experts", "expert_cap", "act_embed")
+
+    # ----- expert computation (batched einsum over E) ---------------------
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    gate = layers._act(cfg.activation, jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype)))
+    h = gate * up
+    h = shard_act(h, "experts", "expert_cap", None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    out_buf = shard_act(out_buf, "experts", "expert_cap", "act_embed")
+
+    # ----- combine ---------------------------------------------------------
+    out_flat = out_buf.reshape(E * C, D)
+    slot_cl = jnp.minimum(slot, E * C - 1)
+    contrib = out_flat[slot_cl] * (keep * g_sorted)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[t_sorted].add(contrib)
+    y = y.reshape(B, S, D)
+
+    # ----- shared experts / dense residual (always-on branches) -----------
+    if m.num_shared_experts > 0:
+        y = y + layers.apply_mlp(p["shared"], cfg, x)
+    if m.dense_residual_d_ff > 0:
+        y = y + layers.apply_mlp(p["dense"], cfg, x)
+
+    frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return shard_act(y, "batch", "seq", "act_embed"), {
+        "moe_aux_loss": aux_loss * m.aux_loss_weight,
+        "moe_frac_dropped": frac_dropped,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full MoE transformer layer: attention + MoE FFN
+# ---------------------------------------------------------------------------
+
+
+def moe_layer_schema(cfg: ModelConfig) -> Dict:
+    sch = {
+        "ln_attn": layers.norm_schema(cfg),
+        "attn": layers.mla_schema(cfg) if cfg.attention.kind == "mla"
+        else layers.attn_schema(cfg),
+        "ln_mlp": layers.norm_schema(cfg),
+        "moe": moe_schema(cfg),
+    }
+    if dict(cfg.extra).get("post_norm", False):
+        sch["ln_attn_post"] = layers.norm_schema(cfg)
+        sch["ln_mlp_post"] = layers.norm_schema(cfg)
+    return sch
+
+
+def moe_layer_cache_schema(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    return layers.attn_mlp_cache_schema(cfg, batch, seq)
+
+
+def apply_moe_layer(
+    p: Dict, x: jax.Array, ctx: layers.Ctx, cache: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    cfg = ctx.cfg
+    new_cache: Dict = {}
+    h = layers.apply_norm(p["ln_attn"], cfg, x)
+    if cfg.attention.kind == "mla":
+        y, c = layers.apply_mla(p["attn"], h, ctx,
+                                cache.get("attn") if cache else None)
+    else:
+        y, c = layers.apply_attn(p["attn"], h, ctx,
+                                 cache.get("attn") if cache else None)
+    if c is not None:
+        new_cache["attn"] = c
+    x = x + y
+    h = layers.apply_norm(p["ln_mlp"], cfg, x)
+    if ctx.moe_impl == "a2a":
+        from repro.models.moe_a2a import apply_moe_a2a
+
+        y, aux = apply_moe_a2a(p["moe"], cfg, h)
+    else:
+        y, aux = apply_moe(p["moe"], cfg, h)
+    x = x + y
+    return x, (new_cache if cache is not None else None), aux

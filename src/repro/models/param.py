@@ -1,0 +1,85 @@
+"""Parameter schemas: shape + logical axes + initializer, as pure data.
+
+A layer is described by a *schema*: a nested dict whose leaves are
+``ParamSpec``.  From a schema we derive, without ever allocating:
+
+* ``init_tree``     — materialized parameters (jnp arrays)
+* ``abstract_tree`` — ShapeDtypeStructs (for dry-run lowering)
+* ``axes_tree``     — logical-axis tuples (for sharding resolution)
+
+Stacked (scanned) layers are created by vmapping ``init_tree`` over a leading
+key axis, which prepends a "layers" logical axis to every leaf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    scale: Optional[float] = None  # stddev override; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaf_init(spec: ParamSpec, key, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[0] if spec.shape else 1
+    scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    if spec.init == "small_normal":
+        scale = 0.02
+    return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+
+
+def init_tree(key: jax.Array, schema: Any, dtype) -> Any:
+    """Materialize a schema into parameter arrays (deterministic key split)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrs = [_leaf_init(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_tree(schema: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), schema, is_leaf=_is_spec
+    )
+
+
+def axes_tree(schema: Any) -> Any:
+    return jax.tree.map(lambda s: tuple(s.axes), schema, is_leaf=_is_spec)
+
+
+def stack_schema(schema: Any, num: int) -> Any:
+    """Schema for `num` stacked copies (leading scanned 'layers' axis)."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            (num, *s.shape), ("layers", *s.axes), init=s.init, scale=s.scale
+        ),
+        schema,
+        is_leaf=_is_spec,
+    )
+
+
+def init_stacked(key: jax.Array, schema: Any, num: int, dtype) -> Any:
+    keys = jax.random.split(key, num)
+    return jax.vmap(lambda k: init_tree(k, schema, dtype))(keys)
+
+
+def param_count(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

@@ -1,0 +1,223 @@
+"""Mamba-2 (SSD — state space duality) block, chunked-parallel in pure jnp.
+
+Follows the "ssd_minimal" formulation from the Mamba-2 paper
+[arXiv:2405.21060]: within a chunk of length L the output is a masked
+(decay-weighted) attention-like contraction; across chunks a lightweight
+recurrence carries the state ``[B, H, P, N]``.  The recurrence is a
+``lax.scan`` over chunks, so sequence memory stays O(L · width) — the same
+structure the Pallas kernel in ``repro.kernels.mamba2_ssd`` tiles into VMEM.
+
+Decode is a single-step state update: ``s ← exp(dt·A)·s + dt·B⊗x``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models import layers
+from repro.sharding import shard_act
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.num_heads(cfg.d_model)
+    return s, di, H, s.head_dim, s.d_state, s.ngroups
+
+
+def mamba2_schema(cfg: ModelConfig) -> Dict:
+    s, di, H, P, N, G = _dims(cfg)
+    D = cfg.d_model
+    return {
+        "ln": layers.norm_schema(cfg),
+        "w_z": ParamSpec((D, di), ("embed", "ssm_inner")),
+        "w_x": ParamSpec((D, di), ("embed", "ssm_inner")),
+        "w_B": ParamSpec((D, G * N), ("embed", None)),
+        "w_C": ParamSpec((D, G * N), ("embed", None)),
+        "w_dt": ParamSpec((D, H), ("embed", "ssm_heads")),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "conv_x": ParamSpec((s.d_conv, di), ("conv_kernel", "ssm_inner"),
+                            init="small_normal"),
+        "conv_B": ParamSpec((s.d_conv, G * N), ("conv_kernel", None),
+                            init="small_normal"),
+        "conv_C": ParamSpec((s.d_conv, G * N), ("conv_kernel", None),
+                            init="small_normal"),
+        "out_norm": ParamSpec((di,), ("norm",), init="ones"),
+        "w_out": ParamSpec((di, D), ("ssm_inner", "embed")),
+    }
+
+
+def mamba2_cache_schema(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    s, di, H, P, N, G = _dims(cfg)
+    return {
+        # last (d_conv - 1) pre-conv inputs for x, B, C
+        "conv": ParamSpec((batch, s.d_conv - 1, di + 2 * G * N),
+                          ("batch", None, "ssm_inner"), init="zeros"),
+        "state": ParamSpec((batch, H, P, N),
+                           ("batch", "ssm_heads", None, None), init="zeros"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq.  x: [B,S,C], w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):  # K is 4: unrolled taps beat a conv op for this shape
+        out = out + pad[:, i : i + x.shape[1], :].astype(jnp.float32) * w[K - 1 - i]
+    return out.astype(x.dtype)
+
+
+def _ssd_chunked(xdt, dA, Bm, Cm, *, chunk: int):
+    """Chunked SSD scan.
+
+    xdt: [B,S,H,P] (dt-scaled inputs), dA: [B,S,H] (= dt * A, negative),
+    Bm/Cm: [B,S,G,N].  Heads are distributed over groups round-robin
+    (H % G == 0).  Returns y: [B,S,H,P].
+    """
+    Bsz, S, H, P = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    hg = H // G  # heads per group
+
+    xdt = xdt.reshape(Bsz, nc, chunk, H, P)
+    dA = dA.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, nc, chunk, G, N)
+    Cm = Cm.reshape(Bsz, nc, chunk, G, N)
+
+    def body(state, inp):
+        # state: [B, H, P, N] (float32)
+        x_c, dA_c, B_c, C_c = inp  # [B,l,H,P], [B,l,H], [B,l,G,N] ×2
+        la = jnp.cumsum(dA_c, axis=1)  # [B,l,H] cumulative log-decay
+        # intra-chunk: L[i,j] = exp(la_i - la_j) for i >= j
+        li = la[:, :, None, :]                     # [B,l,1,H]
+        lj = la[:, None, :, :]                     # [B,1,l,H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask *inside* the exp: exp of the unselected (positive, possibly
+        # huge) branch would give inf·0 = NaN gradients through the where
+        Lm = jnp.exp(jnp.where(mask[None, :, :, None], li - lj, -1e9))
+        # scores[b,i,j,h] = (C_i · B_j) over the head's group
+        Bh = jnp.repeat(B_c, hg, axis=2)           # [B,l,H,N]
+        Ch = jnp.repeat(C_c, hg, axis=2)
+        cb = jnp.einsum("bihn,bjhn->bijh", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", cb * Lm,
+                             x_c.astype(jnp.float32))
+        # inter-chunk: y_i += C_i · state_prev * exp(la_i)
+        y_inter = jnp.einsum("bihn,bhpn->bihp", Ch.astype(jnp.float32),
+                             state) * jnp.exp(la)[..., None]
+        # state update: state = state * exp(la_last) + Σ_j exp(la_last - la_j) B_j x_j
+        w = jnp.exp(la[:, -1:, :] - la)            # [B,l,H]
+        ds = jnp.einsum("bjhn,bjhp->bhpn",
+                        (Bh * w[..., None]).astype(jnp.float32),
+                        x_c.astype(jnp.float32))
+        state = state * jnp.exp(la[:, -1])[:, :, None, None] + ds
+        return state, (y_intra + y_inter).astype(xdt.dtype)
+
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final_state, ys = jax.lax.scan(
+        body, state0,
+        (xdt.swapaxes(0, 1), dA.swapaxes(0, 1), Bm.swapaxes(0, 1),
+         Cm.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def apply_mamba2(
+    p: Dict, x: jax.Array, ctx: layers.Ctx, cache: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    cfg = ctx.cfg
+    s, di, H, P, N, G = _dims(cfg)
+    B_, S, D = x.shape
+
+    res = x
+    h = layers.apply_norm(p["ln"], cfg, x)
+
+    z = h @ p["w_z"].astype(h.dtype)
+    xin = h @ p["w_x"].astype(h.dtype)
+    Bin = h @ p["w_B"].astype(h.dtype)
+    Cin = h @ p["w_C"].astype(h.dtype)
+    dt_raw = h @ p["w_dt"].astype(h.dtype)
+    xin = shard_act(xin, "batch", "seq", "ssm_inner")
+    z = shard_act(z, "batch", "seq", "ssm_inner")
+
+    xbc = jnp.concatenate([xin, Bin, Cin], axis=-1)
+    conv_w = jnp.concatenate(
+        [p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1
+    ).astype(h.dtype)
+
+    new_cache: Optional[Dict] = None
+    if ctx.mode == "decode":
+        # single step: use cached pre-conv window.  tap k of the causal conv
+        # multiplies x[t-k], i.e. the *newest* entry gets conv_w[0] — the
+        # window is oldest-first, so flip the taps.
+        window = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)],
+                                 axis=1)  # [B, K, C] oldest → newest
+        conv_out = jnp.sum(window * conv_w[::-1][None], axis=1, keepdims=True)
+        conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(h.dtype)
+        xc, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+        dt = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+        )  # [B,1,H]
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        xh = xc.reshape(B_, 1, H, P)
+        Bh = jnp.repeat(Bc.reshape(B_, 1, G, N), H // G, axis=2)
+        Ch = jnp.repeat(Cc.reshape(B_, 1, G, N), H // G, axis=2)
+        dA = jnp.exp(dt * A)  # [B,1,H]
+        state = cache["state"] * dA[:, 0, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", (Bh[:, 0] * dt[..., None][:, 0]),
+            xh[:, 0].astype(jnp.float32),
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, 0].astype(jnp.float32), state)
+        y = y[:, None] + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[
+            None, None, :, None]
+        y = y.reshape(B_, 1, di).astype(h.dtype)
+        new_cache = {"conv": window[:, 1:], "state": state}
+    else:
+        conv_out = jax.nn.silu(
+            _causal_conv(xbc, conv_w).astype(jnp.float32)).astype(h.dtype)
+        xc, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+        dt = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+        )  # [B,S,H]
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        xh = xc.reshape(B_, S, H, P)
+        xdt = xh.astype(jnp.float32) * dt[..., None]
+        dA = dt * A  # [B,S,H] (log-decay per step)
+        # pad ragged sequence lengths to a chunk multiple: dA=0 (no decay)
+        # and xdt=0 (no input) make padded steps exact no-ops for the state
+        chunk = min(s.chunk_size, S)
+        Sp = -(-S // chunk) * chunk
+        pad = Sp - S
+        xdt_p = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA_p = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bc_p = jnp.pad(Bc.reshape(B_, S, G, N),
+                       ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cc_p = jnp.pad(Cc.reshape(B_, S, G, N),
+                       ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, final_state = _ssd_chunked(
+            xdt_p.astype(h.dtype), dA_p, Bc_p, Cc_p, chunk=chunk)
+        y = y[:, :S]
+        y = y.astype(jnp.float32) + xh.astype(jnp.float32) * p["D"].astype(
+            jnp.float32)[None, None, :, None]
+        y = y.reshape(B_, S, di).astype(h.dtype)
+        if cache is not None:  # prefill: stash conv window + final state
+            tail = xbc[:, -(s.d_conv - 1):, :]
+            new_cache = {
+                "conv": tail.astype(cache["conv"].dtype),
+                "state": final_state,
+            }
+
+    y = layers.rmsnorm_simple(y * jax.nn.silu(z.astype(jnp.float32)).astype(
+        y.dtype), p["out_norm"])
+    out = y @ p["w_out"].astype(h.dtype)
+    out = shard_act(out, "batch", "seq", "act_embed")
+    return res + out, new_cache, {}

@@ -1,0 +1,335 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory) and sLSTM (scalar).
+
+mLSTM — a gated linear-attention recurrence with exponential input gates and
+sigmoid forget gates, stabilized by a running max ``m``:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T      (matrix memory  [dh × dh])
+    n_t = f_t n_{t-1} + i_t k_t            (normalizer      [dh])
+    h_t = (C_t q_t) / max(|n_t · q_t|, exp(-m_t))
+
+Implemented chunkwise (parallel within a chunk, scan across chunks) so the
+train/prefill path is sub-quadratic and maps onto the same tiling a Pallas
+kernel would use.  sLSTM is an inherently sequential per-cell recurrence with
+block-diagonal (per-head) recurrent weights — implemented as a ``lax.scan``
+over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models import layers
+from repro.sharding import shard_act
+
+NEG_INF = -1e30
+
+
+def _mdims(cfg: ModelConfig):
+    x = cfg.xlstm
+    M = int(x.m_proj_factor * cfg.d_model)
+    H = x.num_heads
+    dh = M // H
+    return x, M, H, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_schema(cfg: ModelConfig) -> Dict:
+    x, M, H, dh = _mdims(cfg)
+    D = cfg.d_model
+    return {
+        "ln": layers.norm_schema(cfg),
+        "w_up": ParamSpec((D, M), ("embed", "ff")),
+        "w_gate": ParamSpec((D, M), ("embed", "ff")),
+        "conv": ParamSpec((x.s_conv_kernel, M), ("conv_kernel", "ff"),
+                          init="small_normal"),
+        "w_q": ParamSpec((M, M), ("ff", None)),
+        "w_k": ParamSpec((M, M), ("ff", None)),
+        "w_v": ParamSpec((M, M), ("ff", None)),
+        "w_i": ParamSpec((M, H), ("ff", None), init="small_normal"),
+        "b_i": ParamSpec((H,), (None,), init="zeros"),
+        "w_f": ParamSpec((M, H), ("ff", None), init="small_normal"),
+        "b_f": ParamSpec((H,), (None,), init="ones"),
+        "out_norm": ParamSpec((M,), ("norm",), init="ones"),
+        "w_down": ParamSpec((M, D), ("ff", "embed")),
+    }
+
+
+def mlstm_cache_schema(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    x, M, H, dh = _mdims(cfg)
+    return {
+        "conv": ParamSpec((batch, x.s_conv_kernel - 1, M), ("batch", None, "ff"),
+                          init="zeros"),
+        "C": ParamSpec((batch, H, dh, dh), ("batch", "heads", None, None),
+                       init="zeros"),
+        "n": ParamSpec((batch, H, dh), ("batch", "heads", None), init="zeros"),
+        "m": ParamSpec((batch, H), ("batch", "heads"), init="zeros"),
+    }
+
+
+def _mlstm_chunked(q, k, v, li, lf, *, chunk: int):
+    """Chunkwise stabilized mLSTM scan.
+
+    q/k/v: [B,S,H,dh]; li (log input gate): [B,S,H]; lf (log forget): [B,S,H].
+    Returns h: [B,S,H,dh] and final (C, n, m).
+    """
+    B, S, H, dh = q.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    qr = q.reshape(B, nc, chunk, H, dh).swapaxes(0, 1)
+    kr = k.reshape(B, nc, chunk, H, dh).swapaxes(0, 1)
+    vr = v.reshape(B, nc, chunk, H, dh).swapaxes(0, 1)
+    lir = li.reshape(B, nc, chunk, H).swapaxes(0, 1)
+    lfr = lf.reshape(B, nc, chunk, H).swapaxes(0, 1)
+
+    def body(carry, inp):
+        C, n, m = carry  # [B,H,dh,dh], [B,H,dh], [B,H]
+        qc, kc, vc, lic, lfc = inp
+        clf = jnp.cumsum(lfc, axis=1)  # [B,l,H] within-chunk cum log-forget
+        # stabilizer per step: max(inter, best intra candidate)
+        bj = lic - clf                              # [B,l,H]
+        intra_max = jax.lax.cummax(bj, axis=1) + clf
+        m_t = jnp.maximum(m[:, None] + clf, intra_max)  # [B,l,H]
+        # --- intra-chunk (masked linear attention with decay) -----------
+        # w[i,j] = exp(clf_i - clf_j + li_j - m_i)  for j <= i
+        wij = (clf[:, :, None] - clf[:, None, :, :] + lic[:, None]
+               - m_t[:, :, None])                   # [B,i,j,H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask inside the exp (NaN-safe gradients; see ssm.py)
+        wij = jnp.exp(jnp.where(mask[None, :, :, None], wij, -1e9))
+        s = jnp.einsum("bihd,bjhd->bijh", qc, kc,
+                       preferred_element_type=jnp.float32) * scale
+        num_intra = jnp.einsum("bijh,bjhd->bihd", s * wij,
+                               vc.astype(jnp.float32))
+        den_intra = jnp.einsum("bijh,bijh->bih", s, wij)
+        # --- inter-chunk ---------------------------------------------------
+        dec = jnp.exp(m[:, None] + clf - m_t)       # [B,l,H]
+        num_inter = jnp.einsum("bihd,bhde->bihe", qc.astype(jnp.float32),
+                               C) * scale * dec[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qc.astype(jnp.float32),
+                               n) * scale * dec
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # --- state update ----------------------------------------------
+        m_new = jnp.maximum(m + clf[:, -1], jnp.max(intra_max[:, -1:], axis=1))
+        wL = jnp.exp(clf[:, -1:] - clf + lic - m_new[:, None])  # [B,l,H]
+        dC = jnp.einsum("bjhd,bjhe->bhde", (kc.astype(jnp.float32)
+                                            * wL[..., None]),
+                        vc.astype(jnp.float32))
+        dn = jnp.einsum("bjhd,bjh->bhd", kc.astype(jnp.float32), wL)
+        decay = jnp.exp(m + clf[:, -1] - m_new)[..., None]
+        C_new = C * decay[..., None] + dC
+        n_new = n * decay + dn
+        return (C_new, n_new, m_new), h.astype(q.dtype)
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), 0.0, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), (qr, kr, vr, lir, lfr))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    return h, (Cf, nf, mf)
+
+
+def apply_mlstm(
+    p: Dict, x: jax.Array, ctx: layers.Ctx, cache: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    cfg = ctx.cfg
+    xc, M, H, dh = _mdims(cfg)
+    B, S, D = x.shape
+    res = x
+    h = layers.apply_norm(p["ln"], cfg, x)
+    up = h @ p["w_up"].astype(h.dtype)
+    gate = h @ p["w_gate"].astype(h.dtype)
+    up = shard_act(up, "batch", "seq", "act_ff")
+
+    new_cache: Optional[Dict] = None
+    if ctx.mode == "decode":
+        window = jnp.concatenate(
+            [cache["conv"], up.astype(cache["conv"].dtype)], axis=1)
+        conv_w = p["conv"].astype(h.dtype)
+        # window is oldest-first; causal-conv tap k multiplies x[t-k]
+        cx = jnp.sum(window * conv_w[::-1][None], axis=1, keepdims=True)
+        cx = jax.nn.silu(cx.astype(jnp.float32)).astype(h.dtype)
+        q = (cx @ p["w_q"].astype(h.dtype)).reshape(B, H, dh)
+        k = (cx @ p["w_k"].astype(h.dtype)).reshape(B, H, dh)
+        v = (up @ p["w_v"].astype(h.dtype)).reshape(B, H, dh)
+        li = (cx @ p["w_i"].astype(h.dtype)).reshape(B, H).astype(jnp.float32) \
+            + p["b_i"].astype(jnp.float32)
+        lf = jax.nn.log_sigmoid(
+            (cx @ p["w_f"].astype(h.dtype)).reshape(B, H).astype(jnp.float32)
+            + p["b_f"].astype(jnp.float32))
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)
+        ip = jnp.exp(li - m_new)
+        kf = k.astype(jnp.float32)
+        C = C * fp[..., None, None] + ip[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kf, v.astype(jnp.float32))
+        n = n * fp[..., None] + ip[..., None] * kf
+        qf = q.astype(jnp.float32) / math.sqrt(dh)
+        num = jnp.einsum("bhd,bhde->bhe", qf, C)
+        den = jnp.einsum("bhd,bhd->bh", qf, n)
+        hv = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        hv = hv.reshape(B, 1, M).astype(h.dtype)
+        new_cache = {"conv": window[:, 1:], "C": C, "n": n, "m": m_new}
+    else:
+        from repro.models.ssm import _causal_conv
+
+        cx = jax.nn.silu(_causal_conv(up, p["conv"].astype(h.dtype)).astype(
+            jnp.float32)).astype(h.dtype)
+        q = (cx @ p["w_q"].astype(h.dtype)).reshape(B, S, H, dh)
+        k = (cx @ p["w_k"].astype(h.dtype)).reshape(B, S, H, dh)
+        v = (up @ p["w_v"].astype(h.dtype)).reshape(B, S, H, dh)
+        li = (cx @ p["w_i"].astype(h.dtype)).astype(jnp.float32) \
+            + p["b_i"].astype(jnp.float32)
+        lf = jax.nn.log_sigmoid(
+            (cx @ p["w_f"].astype(h.dtype)).astype(jnp.float32)
+            + p["b_f"].astype(jnp.float32))
+        # pad ragged lengths to a chunk multiple: li=-1e9 (no input gate)
+        # and lf=0 (no decay) make padded steps state no-ops
+        chunk = min(xc.m_chunk_size, S)
+        Sp = -(-S // chunk) * chunk
+        pad = Sp - S
+        if pad:
+            zpad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+            q = jnp.pad(q, zpad4)
+            k = jnp.pad(k, zpad4)
+            v = jnp.pad(v, zpad4)
+            li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-1e9)
+            lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        hv, (Cf, nf, mf) = _mlstm_chunked(q, k, v, li, lf, chunk=chunk)
+        hv = hv[:, :S].reshape(B, S, M)
+        if cache is not None:
+            tail = up[:, -(xc.s_conv_kernel - 1):, :]
+            new_cache = {"conv": tail.astype(cache["conv"].dtype),
+                         "C": Cf, "n": nf, "m": mf}
+
+    hv = layers.rmsnorm_simple(hv, p["out_norm"])
+    hv = hv * jax.nn.silu(gate.astype(jnp.float32)).astype(hv.dtype)
+    out = hv @ p["w_down"].astype(h.dtype)
+    return res + shard_act(out, "batch", "seq", "act_embed"), new_cache, {}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _sdims(cfg: ModelConfig):
+    x = cfg.xlstm
+    H = x.num_heads
+    dh = cfg.d_model // H
+    F = int(x.s_proj_factor * cfg.d_model)
+    return x, H, dh, F
+
+
+def slstm_schema(cfg: ModelConfig) -> Dict:
+    x, H, dh, F = _sdims(cfg)
+    D = cfg.d_model
+    return {
+        "ln": layers.norm_schema(cfg),
+        # gates i, f, z, o — input + block-diagonal (per-head) recurrent.
+        # The *output* hidden dim carries "slstm_hidden": mapping it onto the
+        # model axis shards the per-step recurrent matmul output-wise (weights
+        # 16× smaller per device; only the tiny h vector is gathered per
+        # step) — §Perf H3 for the xlstm prefill cell.
+        "w_gates": ParamSpec((D, 4, H, dh), ("embed", None, "heads",
+                                             "slstm_hidden")),
+        "r_gates": ParamSpec((H, dh, 4, dh), ("heads", None, None,
+                                              "slstm_hidden"),
+                             init="small_normal"),
+        "b_gates": ParamSpec((4, H, dh), (None, "heads", "slstm_hidden"),
+                             init="zeros"),
+        "out_norm": ParamSpec((D,), ("norm",), init="ones"),
+        "ln_ff": ParamSpec((D,), ("norm",), init="ones"),
+        # post-block gated FFN (proj factor 4/3)
+        "w_ff_gate": ParamSpec((D, F), ("embed", "ff")),
+        "w_ff_up": ParamSpec((D, F), ("embed", "ff")),
+        "w_ff_down": ParamSpec((F, D), ("ff", "embed")),
+    }
+
+
+def slstm_cache_schema(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    x, H, dh, F = _sdims(cfg)
+    ax = ("batch", "heads", "slstm_hidden")
+    return {
+        "c": ParamSpec((batch, H, dh), ax, init="zeros"),
+        "n": ParamSpec((batch, H, dh), ax, init="zeros"),
+        "m": ParamSpec((batch, H, dh), ax, init="zeros"),
+        "h": ParamSpec((batch, H, dh), ax, init="zeros"),
+    }
+
+
+def _slstm_cell(p, state, g_in):
+    """One sLSTM step.  g_in: [B,4,H,dh] (input contribution to gates)."""
+    c, n, m, hprev = state
+    rec = jnp.einsum("bhd,hdge->bghe", hprev,
+                     p["r_gates"].astype(hprev.dtype))
+    g = g_in.astype(jnp.float32) + rec.astype(jnp.float32) \
+        + p["b_gates"].astype(jnp.float32)[None]
+    li, lf, z_raw, o_raw = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    lf = jax.nn.log_sigmoid(lf)
+    m_new = jnp.maximum(lf + m, li)
+    ip = jnp.exp(li - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new.astype(hprev.dtype)), h_new
+
+
+def apply_slstm(
+    p: Dict, x: jax.Array, ctx: layers.Ctx, cache: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    cfg = ctx.cfg
+    xc, H, dh, F = _sdims(cfg)
+    B, S, D = x.shape
+    res = x
+    h = layers.apply_norm(p["ln"], cfg, x)
+    g_in = jnp.einsum("bsd,dghe->bsghe", h, p["w_gates"].astype(h.dtype))
+
+    if ctx.mode == "decode":
+        state = (cache["c"], cache["n"], cache["m"],
+                 cache["h"].astype(h.dtype))
+        state, hv = _slstm_cell(p, state, g_in[:, 0])
+        hv = hv[:, None].reshape(B, 1, D).astype(h.dtype)
+        new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                     "h": state[3].astype(cache["h"].dtype)}
+    else:
+        state0 = (
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.full((B, H, dh), 0.0, jnp.float32),
+            jnp.zeros((B, H, dh), h.dtype),
+        )
+        state, hs = jax.lax.scan(
+            lambda s, gi: _slstm_cell(p, s, gi), state0, g_in.swapaxes(0, 1))
+        hv = hs.swapaxes(0, 1).reshape(B, S, D).astype(h.dtype)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                         "h": state[3].astype(cache["h"].dtype)}
+
+    hv = layers.rmsnorm_simple(hv, p["out_norm"])
+    x = res + hv
+    # post FFN (gated, 4/3 factor)
+    h2 = layers.rmsnorm_simple(x, p["ln_ff"])
+    up = h2 @ p["w_ff_up"].astype(x.dtype)
+    gate = jax.nn.gelu((h2 @ p["w_ff_gate"].astype(x.dtype)).astype(
+        jnp.float32)).astype(x.dtype)
+    y = (gate * up) @ p["w_ff_down"].astype(x.dtype)
+    return x + shard_act(y, "batch", "seq", "act_embed"), new_cache, {}

@@ -1,0 +1,17 @@
+from repro.optim.adamw import (
+    OptState,
+    apply_updates,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+    opt_state_axes,
+)
+
+__all__ = [
+    "OptState",
+    "apply_updates",
+    "global_norm",
+    "init_opt_state",
+    "lr_schedule",
+    "opt_state_axes",
+]

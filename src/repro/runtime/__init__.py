@@ -1,0 +1,4 @@
+from repro.runtime.trainer import Trainer, TrainState
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = ["Trainer", "TrainState", "StragglerMonitor"]

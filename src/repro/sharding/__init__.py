@@ -1,0 +1,23 @@
+from repro.sharding.axes import (
+    DEFAULT_RULES,
+    LogicalRules,
+    current_mesh,
+    current_rules,
+    logical_to_pspec,
+    logical_to_sharding,
+    shard_act,
+    tree_shardings,
+    use_mesh,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "LogicalRules",
+    "current_mesh",
+    "current_rules",
+    "logical_to_pspec",
+    "logical_to_sharding",
+    "shard_act",
+    "tree_shardings",
+    "use_mesh",
+]

@@ -1,0 +1,37 @@
+"""Property tests: checkpoint round-trips for arbitrary dtypes/shapes."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_tree, save_tree
+
+
+@hypothesis.given(
+    st.sampled_from(["float32", "bfloat16", "int32", "float16"]),
+    st.lists(st.integers(1, 5), min_size=1, max_size=3),
+    st.integers(0, 2 ** 31 - 1),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_roundtrip_bit_exact(dtype, shape, seed):
+    import tempfile
+    from pathlib import Path
+
+    dt = jnp.dtype(dtype)
+    key = jax.random.PRNGKey(seed)
+    if dtype == "int32":
+        arr = jax.random.randint(key, shape, -1000, 1000).astype(dt)
+    else:
+        arr = jax.random.normal(key, shape, jnp.float32).astype(dt)
+    tree = {"x": arr, "nested": {"y": arr * 2}}
+    with tempfile.TemporaryDirectory() as d:
+        save_tree(tree, Path(d) / "ck")
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        back = restore_tree(Path(d) / "ck", abstract)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32) if a.dtype != jnp.int32 else np.asarray(a),
+            np.asarray(b, np.float32) if b.dtype != jnp.int32 else np.asarray(b))

@@ -1,0 +1,57 @@
+"""Config registry + published-geometry invariants."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, shapes_for
+
+# published parameter counts (±12% — embedding/tie conventions vary)
+EXPECTED_PARAMS = {
+    "zamba2-7b": 7.0e9,
+    "internvl2-2b": 1.9e9,       # LM backbone (frontend is a stub)
+    "granite-8b": 8.0e9,
+    "yi-6b": 6.1e9,
+    "nemotron-4-15b": 15.5e9,
+    "gemma2-9b": 9.2e9,
+    "whisper-tiny": 37e6,
+    "xlstm-125m": 125e6,
+    "arctic-480b": 480e9,
+    "deepseek-v2-236b": 236e9,
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_published(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expect = EXPECTED_PARAMS[arch]
+    assert abs(n - expect) / expect < 0.12, (arch, n, expect)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_pattern_divides_layers(arch):
+    cfg = get_config(arch)
+    assert cfg.num_groups >= 1  # asserts divisibility internally
+    smoke = get_smoke_config(arch)
+    assert smoke.num_groups >= 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_shapes_for(arch):
+    cfg = get_config(arch)
+    names = {s.name for s in shapes_for(cfg)}
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= names
+    # long_500k only for sub-quadratic archs
+    assert ("long_500k" in names) == cfg.supports_long_context
+    assert cfg.supports_long_context == (arch in ("zamba2-7b", "xlstm-125m"))
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek-v2-236b")
+    active = cfg.active_param_count()
+    # DeepSeek-V2 quotes ~21B activated
+    assert 15e9 < active < 30e9, active
+
+
+def test_replace_is_pure():
+    cfg = get_config("yi-6b")
+    cfg2 = cfg.replace(num_layers=2)
+    assert cfg.num_layers == 32 and cfg2.num_layers == 2

@@ -1,0 +1,71 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import lm
+
+
+def _batch(cfg, key, B=2, S=32):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend.kind != "none":
+        P = cfg.frontend.num_positions
+        batch["frontend"] = jax.random.normal(
+            key, (B, P, cfg.frontend.d_frontend), jnp.float32)
+    batch["targets"] = jnp.roll(batch["tokens"], -1, axis=1)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = lm.init(rng, cfg)
+    batch = _batch(cfg, rng)
+    logits, aux, _ = lm.forward(params, cfg, batch, mode="train")
+    assert logits.shape == (2, 32, lm.padded_vocab(cfg))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, metrics = lm.lm_loss(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    assert loss > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_grad_step_reduces_loss(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = lm.init(rng, cfg)
+    batch = _batch(cfg, rng)
+
+    def loss_fn(p):
+        return lm.lm_loss(p, cfg, batch)[0]
+
+    l0, g = jax.value_and_grad(loss_fn)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                         for x in jax.tree.leaves(g)))
+    assert bool(jnp.isfinite(gnorm)) and gnorm > 0
+    lr = 1e-2 / max(float(gnorm), 1.0)
+    p2 = jax.tree.map(lambda p, gg: p - lr * gg.astype(p.dtype), params, g)
+    l1 = loss_fn(p2)
+    assert float(l1) < float(l0), (arch, float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_remat_matches_no_remat(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = lm.init(rng, cfg)
+    batch = _batch(cfg, rng)
+    l_full, _ = lm.lm_loss(params, cfg, batch, remat="full")
+    l_none, _ = lm.lm_loss(params, cfg, batch, remat="none")
+    assert abs(float(l_full) - float(l_none)) < 1e-4
+
+
+def test_attn_impls_agree(rng):
+    cfg = get_smoke_config("yi-6b")
+    params = lm.init(rng, cfg)
+    batch = _batch(cfg, rng)
+    a, _, _ = lm.forward(params, cfg, batch, attn_impl="chunked_scan",
+                         q_chunk=8, kv_chunk=8)
+    b, _, _ = lm.forward(params, cfg, batch, attn_impl="chunked_tri",
+                         q_chunk=8, kv_chunk=8)
+    assert jnp.allclose(a, b, rtol=1e-4, atol=1e-4)

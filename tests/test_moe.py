@@ -1,0 +1,101 @@
+"""MoE dispatch mechanics: routing, capacity drops, combine weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.moe import _capacity, apply_moe
+
+
+def _setup(cf=4.0, E=8, k=2):
+    cfg = get_smoke_config("arctic-480b")
+    cfg = cfg.replace(moe=cfg.moe.replace(capacity_factor=cf, num_experts=E,
+                                          top_k=k))
+    from repro.models.moe import moe_schema
+    from repro.models.param import init_tree
+
+    p = init_tree(jax.random.PRNGKey(0), moe_schema(cfg), jnp.float32)
+    return cfg, p
+
+
+def test_moe_output_finite_and_shaped():
+    cfg, p = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y, aux = apply_moe(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux["moe_aux_loss"]) > 0
+
+
+def test_no_drops_with_ample_capacity():
+    cfg, p = _setup(cf=8.0)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg.d_model))
+    _, aux = apply_moe(p, cfg, x)
+    assert float(aux["moe_frac_dropped"]) == 0.0
+
+
+def test_drops_with_tiny_capacity():
+    cfg, p = _setup(cf=0.1)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    _, aux = apply_moe(p, cfg, x)
+    assert float(aux["moe_frac_dropped"]) > 0.2
+
+
+def test_capacity_formula_monotone():
+    cfg, _ = _setup()
+    m = cfg.moe
+    caps = [_capacity(t, m) for t in (64, 256, 1024)]
+    assert caps == sorted(caps)
+    assert all(c % 8 == 0 for c in caps)
+
+
+def test_moe_gradients_flow_to_experts():
+    cfg, p = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, cfg.d_model))
+
+    def loss(p):
+        y, aux = apply_moe(p, cfg, x)
+        return jnp.sum(y ** 2) + aux["moe_aux_loss"]
+
+    g = jax.grad(loss)(p)
+    gw = float(jnp.sum(jnp.abs(g["w_up"])))
+    gr = float(jnp.sum(jnp.abs(g["router"])))
+    assert gw > 0 and gr > 0
+
+
+def test_a2a_dispatch_matches_scatter():
+    """shard_map all-to-all MoE must reproduce the scatter baseline
+    (fwd + grad) at drop-free capacity — run on 8 fake devices."""
+    import os
+    import subprocess
+    import sys
+
+    code = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.models.moe import apply_moe, moe_schema
+from repro.models.moe_a2a import apply_moe_a2a
+from repro.models.param import init_tree
+from repro.sharding import use_mesh
+
+cfg = get_smoke_config("deepseek-v2-236b")
+cfg = cfg.replace(moe=cfg.moe.replace(capacity_factor=8.0))
+p = init_tree(jax.random.PRNGKey(0), moe_schema(cfg), jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+y_ref, _ = apply_moe(p, cfg, x)
+mesh = make_mesh((2, 4), ("data", "model"))
+with use_mesh(mesh):
+    y_a2a, _ = jax.jit(lambda p, x: apply_moe_a2a(p, cfg, x))(p, x)
+rel = float(jnp.max(jnp.abs(y_a2a - y_ref)) / jnp.max(jnp.abs(y_ref)))
+assert rel < 1e-4, rel
+print("A2A_OK", rel)
+'''
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.getcwd())
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "A2A_OK" in out.stdout

@@ -1,0 +1,64 @@
+"""Property tests for the ring-buffer window cache decode path."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (
+    decode_attention,
+    decode_attention_at_positions,
+)
+
+KEY = jax.random.PRNGKey(3)
+
+
+@hypothesis.given(
+    st.integers(4, 48),     # current position
+    st.sampled_from([8, 16]),  # ring size (== window)
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_ring_decode_matches_linear_cache(cur, W):
+    """Attention over a ring buffer of the last W tokens must equal
+    attention over a full linear cache with the same window mask."""
+    B, Hq, Hkv, D = 2, 4, 2, 16
+    S_full = 64
+    k_full = jax.random.normal(jax.random.fold_in(KEY, 1),
+                               (B, S_full, Hkv, D))
+    v_full = jax.random.normal(jax.random.fold_in(KEY, 2),
+                               (B, S_full, Hkv, D))
+    q = jax.random.normal(jax.random.fold_in(KEY, 3), (B, 1, Hq, D))
+
+    # reference: full cache + window mask
+    want = decode_attention(q, k_full, v_full, jnp.asarray(cur),
+                            window=W)
+
+    # ring: slot s holds position p = cur - ((cur - s) mod W), for p >= 0
+    slots = np.arange(W)
+    abs_pos = cur - ((cur - slots) % W)
+    k_ring = np.zeros((B, W, Hkv, D), np.float32)
+    v_ring = np.zeros((B, W, Hkv, D), np.float32)
+    for s, p in enumerate(abs_pos):
+        if p >= 0:
+            k_ring[:, s] = np.asarray(k_full[:, p])
+            v_ring[:, s] = np.asarray(v_full[:, p])
+    got = decode_attention_at_positions(
+        q, jnp.asarray(k_ring), jnp.asarray(v_ring),
+        jnp.asarray(abs_pos), jnp.asarray(cur), window=W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@hypothesis.given(st.integers(0, 200))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_ring_slot_position_recovery(cur):
+    """The slot-position formula used in apply_attn recovers absolute
+    positions uniquely and within (cur - W, cur]."""
+    W = 16
+    slots = np.arange(W)
+    abs_pos = cur - ((cur - slots + W * 8) % W)
+    valid = abs_pos >= 0
+    assert np.all(abs_pos[valid] <= cur)
+    assert np.all(abs_pos[valid] > cur - W)
+    # each valid position maps back to its own slot
+    assert np.all((abs_pos[valid] % W) == slots[valid])

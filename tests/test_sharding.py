@@ -1,0 +1,80 @@
+"""Logical-axis sharding rules: resolution, divisibility guard, virtual
+axes, activation constraints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_mesh
+from repro.sharding import (
+    logical_to_pspec,
+    shard_act,
+    tree_shardings,
+    use_mesh,
+)
+
+
+@pytest.fixture
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_basic_resolution(mesh):
+    spec = logical_to_pspec(("embed", "ff"), mesh)
+    assert spec == P("data", "model")
+
+
+def test_virtual_dp_axis(mesh):
+    spec = logical_to_pspec(("batch", "seq"), mesh)
+    assert spec == P("data")
+
+
+def test_multi_pod_virtual_axes():
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    spec = logical_to_pspec(("batch", None, "ff"), mesh)
+    assert spec == P(("pod", "data"), None, "model")
+
+
+def test_divisibility_guard_abstract():
+    # exercise the arithmetic directly with a fake mesh-shape mapping
+    from repro.sharding.axes import _axis_size
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = logical_to_pspec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                            FakeMesh(), dim_sizes=(128, 32768, 8, 128))
+    assert spec == P("data", "model")
+
+
+def test_no_axis_reuse():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    # both dims want "model": only the first gets it
+    spec = logical_to_pspec(("vocab", "ff"), FakeMesh(),
+                            dim_sizes=(512, 512))
+    assert spec == P("model")
+
+
+def test_shard_act_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = shard_act(x, "batch", None)
+    np.testing.assert_array_equal(x, y)
+
+
+def test_shard_act_with_mesh(mesh):
+    with use_mesh(mesh):
+        x = jnp.ones((4, 4))
+        y = shard_act(x, "batch", "act_ff")
+        np.testing.assert_array_equal(x, y)
+
+
+def test_tree_shardings_structure(mesh):
+    axes = {"w": ("embed", "ff"), "b": ("ff",)}
+    specs = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32),
+             "b": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    sh = tree_shardings(axes, specs, mesh=mesh)
+    assert sh["w"].spec == P("data", "model")
+    assert sh["b"].spec == P("model")

@@ -1,0 +1,131 @@
+"""UIPiCK tag-filtering semantics (paper §7.1) + work removal (§7.1.1)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.counting import count_fn
+from repro.core.uipick import (
+    ALL_GENERATORS,
+    KernelCollection,
+    MatchCondition,
+    parse_filter_tags,
+)
+from repro.core.workremoval import remove_work
+
+COLL = KernelCollection(ALL_GENERATORS)
+
+
+def test_superset_default_single_generator():
+    knls = COLL.generate_kernels(
+        ["matmul_sq", "dtype:float32", "prefetch:True", "tile:32",
+         "n:256,512"])
+    assert len(knls) == 2
+    assert all(k.tags["prefetch"] and k.tags["dtype"] == "float32"
+               for k in knls)
+
+
+def test_superset_two_tags_matches_nothing():
+    # no generator carries BOTH matmul_sq and finite_diff (paper's example)
+    knls = COLL.generate_kernels(["matmul_sq", "finite_diff", "n:256",
+                                  "n_grid:1024"])
+    assert knls == []
+
+
+def test_intersect_matches_both():
+    knls = COLL.generate_kernels(
+        ["matmul_sq", "finite_diff", "dtype:float32", "prefetch:False",
+         "tile:16", "n:256", "n_grid:1024", "variant:roll"],
+        generator_match_cond=MatchCondition.INTERSECT)
+    names = {k.name.split("_")[0] for k in knls}
+    assert names == {"matmul", "stencil"}
+
+
+def test_identical_and_subset():
+    got = COLL.generate_kernels(
+        ["matmul_sq", "matmul", "n:256", "dtype:float32", "prefetch:False",
+         "tile:16"], generator_match_cond=MatchCondition.IDENTICAL)
+    assert len(got) == 1
+    got = COLL.generate_kernels(
+        ["matmul_sq", "matmul", "flops", "flops_madd_pattern", "n:256",
+         "dtype:float32", "prefetch:False", "tile:16",
+         "nelements:4096", "iters:64"],
+        generator_match_cond=MatchCondition.SUBSET)
+    kinds = {k.name.split("_")[0] for k in got}
+    assert kinds == {"matmul", "madd"}
+
+
+def test_variant_cartesian_product_size():
+    knls = COLL.generate_kernels(
+        ["flops_madd_pattern", "dtype:float32",
+         "nelements:4096,16384", "iters:64,128,256"])
+    assert len(knls) == 2 * 3
+
+
+@hypothesis.given(st.sampled_from(["float32", "bfloat16"]),
+                  st.sampled_from([256, 512]))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_parse_filter_tags_roundtrip(dtype, n):
+    gen_tags, variant = parse_filter_tags(
+        ["matmul_sq", f"dtype:{dtype}", f"n:{n}", "prefetch:True"])
+    assert gen_tags == {"matmul_sq"}
+    assert variant["dtype"] == (dtype,)
+    assert variant["n"] == (n,)
+    assert variant["prefetch"] == (True,)
+
+
+def test_kernel_counts_and_timing():
+    (knl,) = COLL.generate_kernels(
+        ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16", "n:256"])
+    c = knl.counts()
+    assert c["f_op_float32_madd"] == 256 ** 3
+    t = knl.time(trials=3, warmup=1)
+    assert 0 < t < 5.0
+
+
+# ---------------------------------------------------------------------------
+# work removal
+# ---------------------------------------------------------------------------
+
+
+def test_work_removal_preserves_kept_access_and_value():
+    def tiled(a, b):
+        def body(acc, i):
+            ak = jax.lax.dynamic_slice_in_dim(a, i * 16, 16, axis=1)
+            bk = jax.lax.dynamic_slice_in_dim(b, i * 16, 16, axis=0)
+            return acc + ak @ bk, None
+
+        acc, _ = jax.lax.scan(body, jnp.zeros((64, 64)), jnp.arange(4))
+        return acc
+
+    a = jnp.ones((64, 64))
+    b = (jnp.arange(64 * 64, dtype=jnp.float32) / 4096).reshape(64, 64)
+    stripped = remove_work(tiled, a, b, remove_args=(0,))
+    # additive accounting: every kept element read exactly once
+    assert float(jax.jit(stripped)(a, b)) == pytest.approx(
+        float(jnp.sum(b)), rel=1e-5)
+    cs = count_fn(stripped, a, b)
+    co = count_fn(tiled, a, b)
+    assert cs["f_op_float32_madd"] == 0
+    assert co["f_op_float32_madd"] == 64 * 64 * 64
+    assert cs["f_mem_gather_float32_load"] == 4096      # b only
+    assert co["f_mem_gather_float32_load"] == 8192      # a and b
+
+
+def test_work_removal_keeps_afr():
+    """A *stripped compute site* inside a loop re-reading the same array
+    keeps its access-to-footprint ratio (paper: the b-pattern's AFR of
+    n/16 survives work removal)."""
+    def rereader(x):
+        def body(acc, _):
+            # tanh is on-chip work → stripped; its read of x is kept
+            return acc + jnp.sum(jnp.tanh(x)), None
+
+        acc, _ = jax.lax.scan(body, jnp.float32(0), None, length=5)
+        return acc
+
+    x = jnp.ones((128,))
+    stripped = remove_work(rereader, x)
+    # the tanh site executes 5× → its operand x is read 5× (AFR = 5)
+    assert float(jax.jit(stripped)(x)) == pytest.approx(5 * 128, rel=1e-4)
