@@ -1,0 +1,98 @@
+"""Calibration-engine benchmark: batched jit-compiled ``fit_model`` vs the
+preserved row-by-row reference implementation.
+
+The paper's usability claim (§7.2) is that black-box calibration is cheap
+enough to re-run per machine and per model variant; this bench pins that
+cost on a 64-row × 3-seed fit so the speedup stays visible in the bench
+trajectory.  Rows:
+
+  calibration.fit64x3_reference      — original engine, one full fit
+  calibration.fit64x3_batched_cold   — batched engine incl. jit compile
+  calibration.fit64x3_batched_warm   — batched engine, solver cached
+                                       (the per-machine re-calibration cost)
+
+``derived`` carries the speedup vs the reference (warm/cold) and the max
+relative parameter disagreement between the two engines.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.calibrate import fit_model
+from repro.core.calibrate_reference import reference_fit_model
+from repro.core.model import FeatureTable, Model
+
+N_ROWS = 64
+SEEDS = 3
+
+MODEL_EXPR = (
+    "p_madd * f_op_float32_madd "
+    "+ p_mem * (f_mem_contig_float32_load + f_mem_contig_float32_store) "
+    "+ p_gather * f_mem_gather_float32_load "
+    "+ p_launch * f_sync_launch_kernel"
+)
+TRUE_PARAMS = {"p_madd": 2.5e-10, "p_mem": 4.0e-9, "p_gather": 1.6e-8,
+               "p_launch": 3.0e-5}
+
+
+def synthetic_table(n_rows: int = N_ROWS) -> FeatureTable:
+    """Deterministic 64-kernel timing table with the shared linear model's
+    feature mix (madd / contig / gather / launch) and 1% lognormal noise."""
+    rng = np.random.RandomState(20190417)
+    feats = {
+        "f_op_float32_madd": 10 ** rng.uniform(5, 9, n_rows),
+        "f_mem_contig_float32_load": 10 ** rng.uniform(4, 8, n_rows),
+        "f_mem_contig_float32_store": 10 ** rng.uniform(4, 8, n_rows),
+        "f_mem_gather_float32_load": 10 ** rng.uniform(3, 7, n_rows),
+        "f_sync_launch_kernel": np.ones(n_rows),
+    }
+    t = (TRUE_PARAMS["p_madd"] * feats["f_op_float32_madd"]
+         + TRUE_PARAMS["p_mem"] * (feats["f_mem_contig_float32_load"]
+                                   + feats["f_mem_contig_float32_store"])
+         + TRUE_PARAMS["p_gather"] * feats["f_mem_gather_float32_load"]
+         + TRUE_PARAMS["p_launch"])
+    t = t * np.exp(rng.normal(0.0, 0.01, n_rows))
+    ids = sorted(feats) + ["f_wall_time_cpu_host"]
+    vals = np.stack([feats[f] for f in sorted(feats)] + [t], axis=1)
+    return FeatureTable(ids, vals, [f"synth{i}" for i in range(n_rows)])
+
+
+def calibration_rows() -> List[str]:
+    table = synthetic_table()
+    rows: List[str] = []
+
+    model_ref = Model("f_wall_time_cpu_host", MODEL_EXPR)
+    t0 = time.perf_counter()
+    params_ref, _ = reference_fit_model(
+        model_ref, table.rows(), nonneg=True, seeds=SEEDS)
+    t_ref = time.perf_counter() - t0
+    rows.append(f"calibration.fit64x3_reference,{t_ref * 1e6:.0f},")
+
+    model = Model("f_wall_time_cpu_host", MODEL_EXPR)
+    t0 = time.perf_counter()
+    fit = fit_model(model, table, nonneg=True, seeds=SEEDS)
+    t_cold = time.perf_counter() - t0
+    rows.append(f"calibration.fit64x3_batched_cold,{t_cold * 1e6:.0f},"
+                f"{t_ref / t_cold:.1f}x")
+
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fit = fit_model(model, table, nonneg=True, seeds=SEEDS)
+    t_warm = (time.perf_counter() - t0) / reps
+    rows.append(f"calibration.fit64x3_batched_warm,{t_warm * 1e6:.0f},"
+                f"{t_ref / t_warm:.0f}x")
+
+    rel = max(abs(fit.params[n] - params_ref[n])
+              / max(abs(params_ref[n]), 1e-30) for n in params_ref)
+    rows.append(f"calibration.param_max_rel_diff,{rel:.2e},")
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in calibration_rows():
+        print(r, flush=True)

@@ -20,7 +20,7 @@ from repro.core.uipick import (
     KernelCollection,
     MatchCondition,
     MeasurementKernel,
-    gather_feature_values,
+    gather_feature_table,
 )
 
 TRIALS = int(os.environ.get("BENCH_TRIALS", "8"))
@@ -59,8 +59,8 @@ def calibrated_base_model():
     model = linear_model()
     knls = COLLECTION.generate_kernels(
         CAL_TAGS, generator_match_cond=MatchCondition.INTERSECT)
-    rows = gather_feature_values(model.all_features(), knls, trials=TRIALS)
-    fit = fit_model(model, rows, nonneg=True)
+    table = gather_feature_table(model.all_features(), knls, trials=TRIALS)
+    fit = fit_model(model, table, nonneg=True)
     return model, fit
 
 

@@ -18,7 +18,7 @@ from benchmarks.common import (
 )
 from repro.core.calibrate import fit_model, geometric_mean_relative_error
 from repro.core.model import Model
-from repro.core.uipick import MatchCondition, gather_feature_values
+from repro.core.uipick import MatchCondition, gather_feature_table
 
 
 def fig1_matmul_simple() -> List[str]:
@@ -33,8 +33,8 @@ def fig1_matmul_simple() -> List[str]:
     cal = COLLECTION.generate_kernels(
         ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
          "n:256,384,640,1024"])
-    rows = gather_feature_values(model.all_features(), cal, trials=TRIALS)
-    fit = fit_model(model, rows, nonneg=True)
+    table = gather_feature_table(model.all_features(), cal, trials=TRIALS)
+    fit = fit_model(model, table, nonneg=True)
     test = COLLECTION.generate_kernels(
         ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
          "n:512,768"])
@@ -49,8 +49,8 @@ def fig2_madd_component() -> List[str]:
     cal = COLLECTION.generate_kernels(
         ["flops_madd_pattern", "dtype:float32",
          "nelements:65536", "iters:64,128,256,512"])
-    rows = gather_feature_values(model.all_features(), cal, trials=TRIALS)
-    fit = fit_model(model, rows, nonneg=True)
+    table = gather_feature_table(model.all_features(), cal, trials=TRIALS)
+    fit = fit_model(model, table, nonneg=True)
     test = COLLECTION.generate_kernels(
         ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
          "n:512,768"])
@@ -74,10 +74,10 @@ def fig5_overlap() -> List[str]:
     knls = COLLECTION.generate_kernels(
         ["overlap_pattern", "dtype:float32", "nelements:16777216",
          "m:0,16,256,1024,4096,16384,65536"])
-    rows = gather_feature_values(model.all_features(), knls, trials=TRIALS)
-    fit = fit_model(model, rows)
+    table = gather_feature_table(model.all_features(), knls, trials=TRIALS)
+    fit = fit_model(model, table)
     out, preds, meas = [], [], []
-    for k, r in zip(knls, rows):
+    for k, r in zip(knls, table.rows()):
         p = predict(model, fit, k)
         preds.append(p)
         meas.append(r["f_wall_time_cpu_host"])

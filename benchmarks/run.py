@@ -12,6 +12,7 @@ Benches (one per paper table/figure):
   fig8    §8.4 Fig 8 — four DG differentiation variants
   fig9    §8.5 Fig 9 — two stencil variants
   table3  Table 3    — calibrated parameter values / implied rates
+  calibration — batched vs reference fit_model on a 64-row table
   roofline deliverable g — three-term roofline per (arch × shape)
 """
 import sys
@@ -20,9 +21,11 @@ import time
 
 def main() -> None:
     from benchmarks import paper_figures as pf
+    from benchmarks.calibration_bench import calibration_rows
     from benchmarks.roofline_bench import roofline_rows
 
     benches = {
+        "calibration": calibration_rows,
         "fig1": pf.fig1_matmul_simple,
         "fig2": pf.fig2_madd_component,
         "fig5": pf.fig5_overlap,
@@ -33,6 +36,10 @@ def main() -> None:
         "roofline": roofline_rows,
     }
     only = set(sys.argv[1:]) or set(benches)
+    unknown = only - set(benches)
+    if unknown:
+        raise SystemExit(f"unknown bench(es): {sorted(unknown)}; "
+                         f"available: {sorted(benches)}")
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if name not in only:

@@ -9,7 +9,13 @@ can load it without re-measuring.
 """
 import argparse
 import json
+import pathlib
 import platform
+import sys
+
+# repo root on sys.path so `benchmarks.common` resolves when invoked as
+# `python examples/calibrate_machine.py` (script dir is examples/)
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks.common import BASE_MODEL_EXPR, CAL_TAGS, TRIALS
 from repro.core.calibrate import fit_model
@@ -18,7 +24,7 @@ from repro.core.uipick import (
     ALL_GENERATORS,
     KernelCollection,
     MatchCondition,
-    gather_feature_values,
+    gather_feature_table,
 )
 
 
@@ -33,9 +39,9 @@ def main():
         CAL_TAGS, generator_match_cond=MatchCondition.INTERSECT)
     print(f"running {len(knls)} measurement kernels "
           f"({args.trials} trials each)…")
-    rows = gather_feature_values(model.all_features(), knls,
+    table = gather_feature_table(model.all_features(), knls,
                                  trials=args.trials)
-    fit = fit_model(model, rows, nonneg=True)
+    fit = fit_model(model, table, nonneg=True)
     profile = {
         "machine": platform.processor() or platform.machine(),
         "model_expr": BASE_MODEL_EXPR,

@@ -11,7 +11,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 from repro.core.calibrate import fit_model
 from repro.core.model import Model
 from repro.core.uipick import ALL_GENERATORS, KernelCollection, \
-    gather_feature_values
+    gather_feature_table
 
 # 1. the model: madd cost + launch overhead (paper eq. 1)
 model = Model(
@@ -27,11 +27,12 @@ filter_tags = [
 m_knls = KernelCollection(ALL_GENERATORS).generate_kernels(filter_tags)
 print(f"measurement kernels: {[k.name for k in m_knls]}")
 
-# 3. feature values: symbolic counts + measured wall time
-rows = gather_feature_values(model.all_features(), m_knls, trials=8)
+# 3. feature values: symbolic counts + measured wall time, as one dense
+#    [n_kernels, n_features] table (the batched calibration input)
+table = gather_feature_table(model.all_features(), m_knls, trials=8)
 
-# 4. calibrate
-fit = fit_model(model, rows, nonneg=True)
+# 4. calibrate (all restarts solve in one jit-compiled call)
+fit = fit_model(model, table, nonneg=True)
 print(f"calibrated: {fit.params}  (residual {fit.residual_norm:.3g})")
 print(f"implied madd rate: {1.0 / fit.params['p_f32madd']:.3e} madd/s")
 

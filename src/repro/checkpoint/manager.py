@@ -149,8 +149,13 @@ class CheckpointManager:
     def all_steps(self):
         out = []
         for p in self.root.glob("step_*"):
+            if p.name.endswith(".tmp"):
+                continue  # in-progress atomic write (or a crashed one)
             if p.is_dir() and (p / "manifest.json").exists():
-                out.append(int(p.name.split("_")[1]))
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    continue
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:

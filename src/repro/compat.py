@@ -1,0 +1,55 @@
+"""Version-compatibility shims over the jax API surface.
+
+The repo targets both the pinned jax 0.4.37 and newer releases whose
+sharding API moved (``jax.sharding.AxisType``, the ``axis_types=`` kwarg on
+``jax.make_mesh``, top-level ``jax.shard_map`` with ``check_vma=``).  All
+production code goes through these helpers instead of feature-detecting
+inline; tests import them too so the same suite runs on either version.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P  # noqa: F401  (re-export)
+
+try:  # jax >= 0.5: explicit/auto axis types
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x: every mesh axis behaves like Auto
+    AxisType = None
+
+HAS_AXIS_TYPES = AxisType is not None
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Optional[Sequence] = None) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES:
+        kwargs["axis_types"] = (AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:  # jax 0.4.x: experimental namespace, check_vma spelled check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def jit_cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returned ``[dict]`` through jax 0.4.x
+    and a plain ``dict`` afterwards; normalize to the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

@@ -7,17 +7,29 @@ The fit minimizes ‖t − g(p)‖₂ over parameters p, one residual row per
 measurement kernel; with ``scale_features_by_output`` (default, as in all
 the paper's experiments) rows are normalized by the measured output, making
 it a relative-error fit.
+
+The solver is a single jit-compiled ``lax.while_loop``: the Jacobian
+(``jax.jacfwd``) is traced once, the inner damping search runs inside the
+trace, and multi-start restarts are ``vmap``-ed so all seeds solve in one
+compiled call with no host syncs until the final result fetch.  Compiled
+solvers are cached per ``Model`` (keyed by solver options), so repeated
+calibrations — per machine, per model variant — pay tracing once.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.model import Model
+from repro.core.model import (
+    FeatureTableLike,
+    Model,
+    _param_dtype,
+    as_feature_table,
+)
 
 
 @dataclass
@@ -31,6 +43,99 @@ class FitResult:
         return self.params[k]
 
 
+# ---------------------------------------------------------------------------
+# Trace-friendly LM core
+# ---------------------------------------------------------------------------
+
+
+def _lm_core(
+    resid_fn: Callable[[jax.Array], jax.Array],
+    p0: jax.Array,
+    *,
+    max_iters: int,
+    lam0: float,
+    lam_up: float,
+    lam_down: float,
+    tol: float,
+    nonneg: bool,
+    inner_tries: int = 20,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Classic LM with multiplicative damping adaptation, as one
+    ``lax.while_loop`` — jit/vmap-safe, no host syncs.
+
+    ``nonneg=True`` clamps parameters at 0 after each accepted step —
+    the paper's cost-explanatory interpretability requirement (§4: negative
+    per-operation costs are inconsistent with the notion of 'cost').
+
+    Returns ``(p, cost, iterations, converged)`` as traced arrays.
+    """
+    jac = jax.jacfwd(resid_fn)
+    dt = p0.dtype
+
+    def attempt(p, cost, JTJ, JTr, diag, lam):
+        """One damped solve + trial step at damping ``lam``.  Singular or
+        ill-conditioned systems surface as non-finite ``dp`` from
+        ``jnp.linalg.solve`` (it does not raise under jit), so acceptance
+        requires finiteness explicitly."""
+        A = JTJ + lam * jnp.diag(diag)
+        dp = jnp.linalg.solve(A, -JTr)
+        p_new = p + dp
+        if nonneg:
+            p_new = jnp.maximum(p_new, 0.0)
+        r_new = resid_fn(p_new)
+        cost_new = jnp.sum(r_new * r_new)
+        ok = (jnp.isfinite(dp).all() & jnp.isfinite(cost_new)
+              & (cost_new < cost))
+        return ok, p_new, r_new, cost_new
+
+    def damping_search(p, r, cost, JTJ, JTr, lam):
+        diag = jnp.maximum(jnp.diag(JTJ), jnp.asarray(1e-20, dt))
+
+        def cond(s):
+            tries, _, accepted, *_ = s
+            return (~accepted) & (tries < inner_tries)
+
+        def body(s):
+            tries, lam, _, p_c, r_c, cost_c = s
+            ok, p_n, r_n, cost_n = attempt(p, cost, JTJ, JTr, diag, lam)
+            lam_n = jnp.where(ok,
+                              jnp.maximum(lam * lam_down, 1e-12),
+                              lam * lam_up)
+            keep = lambda new, old: jnp.where(ok, new, old)
+            return (tries + 1, lam_n.astype(dt), ok,
+                    keep(p_n, p_c), keep(r_n, r_c), keep(cost_n, cost_c))
+
+        return jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(0), lam, jnp.bool_(False), p, r, cost))
+
+    def outer_cond(s):
+        p, r, cost, lam, it, converged, done = s
+        return (~done) & (it < max_iters)
+
+    def outer_body(s):
+        p, r, cost, lam, it, converged, done = s
+        J = jac(p)
+        JTJ = J.T @ J
+        JTr = J.T @ r
+        _, lam_n, accepted, p_c, r_c, cost_c = damping_search(
+            p, r, cost, JTJ, JTr, lam)
+        rel = (cost - cost_c) / jnp.maximum(cost, 1e-30)
+        conv_now = accepted & (rel < tol)
+        keep = lambda new, old: jnp.where(accepted, new, old)
+        # damping exhausted without an acceptable step → local minimum
+        return (keep(p_c, p), keep(r_c, r), keep(cost_c, cost), lam_n,
+                it + 1, conv_now | ~accepted, conv_now | ~accepted)
+
+    r0 = resid_fn(p0)
+    cost0 = jnp.sum(r0 * r0)
+    p, r, cost, lam, it, converged, done = jax.lax.while_loop(
+        outer_cond, outer_body,
+        (p0, r0, cost0, jnp.asarray(lam0, dt), jnp.int32(0),
+         jnp.bool_(False), jnp.bool_(False)))
+    return p, cost, it, converged
+
+
 def levenberg_marquardt(
     resid_fn: Callable[[jax.Array], jax.Array],
     p0: jax.Array,
@@ -42,90 +147,107 @@ def levenberg_marquardt(
     tol: float = 1e-12,
     nonneg: bool = False,
 ) -> Tuple[jax.Array, float, int, bool]:
-    """Classic LM with multiplicative damping adaptation.
+    """Single-start LM; one compiled call, one host fetch at the end."""
+    p0 = jnp.asarray(p0, _param_dtype())
+    solve = jax.jit(lambda p: _lm_core(
+        resid_fn, p, max_iters=max_iters, lam0=lam0, lam_up=lam_up,
+        lam_down=lam_down, tol=tol, nonneg=nonneg))
+    p, cost, it, conv = solve(p0)
+    return p, float(np.sqrt(float(cost))), int(it), bool(conv)
 
-    ``nonneg=True`` clamps parameters at 0 after each accepted step —
-    the paper's cost-explanatory interpretability requirement (§4: negative
-    per-operation costs are inconsistent with the notion of 'cost').
-    """
-    jac = jax.jacobian(resid_fn)
-    p = jnp.asarray(p0, jnp.float32)
-    lam = lam0
-    r = resid_fn(p)
-    cost = float(jnp.sum(r * r))
-    it = 0
-    converged = False
-    for it in range(1, max_iters + 1):
-        J = jac(p)
-        JTJ = J.T @ J
-        JTr = J.T @ r
-        stepped = False
-        for _ in range(20):  # inner damping search
-            A = JTJ + lam * jnp.diag(jnp.maximum(jnp.diag(JTJ), 1e-20))
-            try:
-                dp = jnp.linalg.solve(A, -JTr)
-            except Exception:  # singular — bump damping
-                lam *= lam_up
-                continue
-            p_new = p + dp
-            if nonneg:
-                p_new = jnp.maximum(p_new, 0.0)
-            r_new = resid_fn(p_new)
-            cost_new = float(jnp.sum(r_new * r_new))
-            if np.isfinite(cost_new) and cost_new < cost:
-                rel = (cost - cost_new) / max(cost, 1e-30)
-                p, r, cost = p_new, r_new, cost_new
-                lam = max(lam * lam_down, 1e-12)
-                stepped = True
-                if rel < tol:
-                    converged = True
-                break
-            lam *= lam_up
-        if not stepped or converged:
-            converged = converged or not stepped
-            break
-    return p, float(np.sqrt(cost)), it, converged
+
+# ---------------------------------------------------------------------------
+# Multi-start batched fit
+# ---------------------------------------------------------------------------
+
+
+def _batch_solver(model: Model, *, nonneg: bool, max_iters: int, lam0: float,
+                  lam_up: float, lam_down: float, tol: float) -> Callable:
+    """Compiled ``(F, target, starts) -> best (p, cost, it, conv)`` solver;
+    cached on the model so repeated calibrations re-use the trace (jit
+    itself re-specializes on new table shapes)."""
+    key = ("lm_batch", nonneg, max_iters, lam0, lam_up, lam_down, tol)
+    solver = model._solver_cache.get(key)
+    if solver is None:
+
+        @jax.jit
+        def solver(F, target, starts):
+            def resid(p):
+                return target - model.batched_eval(p, F)
+
+            def one(s):
+                return _lm_core(resid, s, max_iters=max_iters, lam0=lam0,
+                                lam_up=lam_up, lam_down=lam_down, tol=tol,
+                                nonneg=nonneg)
+
+            p, cost, it, conv = jax.vmap(one)(starts)
+            best = jnp.argmin(cost)
+            return p[best], cost[best], it[best], conv[best]
+
+        model._solver_cache[key] = solver
+    return solver
+
+
+def _multi_starts(p_init: jax.Array, names: Sequence[str], seeds: int
+                  ) -> jax.Array:
+    """``[seeds, n_params]`` deterministic restarts: the nominal start plus
+    log-uniform perturbations (nonlinear overlap models have local minima).
+    ``p_edge``-style parameters start at O(1), not O(1e-9)."""
+    starts = [p_init]
+    key = jax.random.PRNGKey(0)
+    for _ in range(seeds - 1):
+        key, sub = jax.random.split(key)
+        starts.append(p_init * jnp.exp(
+            jax.random.uniform(sub, p_init.shape, minval=-2.0, maxval=2.0)))
+    out = jnp.stack(starts)
+    edge_idx = [i for i, n in enumerate(names) if "edge" in n]
+    if edge_idx:
+        out = out.at[:, jnp.asarray(edge_idx, jnp.int32)].set(100.0)
+    return out
 
 
 def fit_model(
     model: Model,
-    feature_table: Sequence[Mapping[str, float]],
+    feature_table: FeatureTableLike,
     *,
     scale_by_output: bool = True,
     p0: Optional[Mapping[str, float]] = None,
     nonneg: bool = False,
     seeds: int = 3,
+    max_iters: int = 200,
+    lam0: float = 1e-3,
+    lam_up: float = 10.0,
+    lam_down: float = 0.3,
+    tol: float = 1e-12,
 ) -> FitResult:
     """Calibrate ``model`` against measurement-kernel feature rows.
 
-    Runs LM from a few deterministic starting points (nonlinear overlap
-    models have local minima) and keeps the best fit.
+    ``feature_table`` may be a :class:`repro.core.model.FeatureTable` or the
+    original one-dict-per-row representation.  All restarts solve in a
+    single compiled vmap-of-while-loop call; the best fit (lowest residual)
+    is returned.
     """
-    resid, p_init, names = model.residual_fn(
-        feature_table, scale_by_output=scale_by_output)
+    table = as_feature_table(feature_table)
+    F_np, target_np = model.design_matrix(
+        table, scale_by_output=scale_by_output)
+    names = model.param_names
+    dt = _param_dtype()
+
+    p_init = jnp.full((len(names),), 1e-9, dt)
     if p0:
-        p_init = jnp.asarray([p0.get(n, 1e-9) for n in names])
+        p_init = jnp.asarray([p0.get(n, 1e-9) for n in names], dt)
+    starts = _multi_starts(p_init, names, max(seeds, 1)).astype(dt)
 
-    starts = [p_init]
-    key = jax.random.PRNGKey(0)
-    for i in range(seeds - 1):
-        key, sub = jax.random.split(key)
-        starts.append(p_init * jnp.exp(
-            jax.random.uniform(sub, p_init.shape, minval=-2.0, maxval=2.0)))
-    # p_edge-style parameters start at O(1), not O(1e-9)
-    starts = [s.at[jnp.asarray(
-        [i for i, n in enumerate(names) if "edge" in n], jnp.int32)].set(100.0)
-        if any("edge" in n for n in names) else s for s in starts]
-
-    best = None
-    for s in starts:
-        p, rn, it, conv = levenberg_marquardt(resid, s, nonneg=nonneg)
-        if best is None or rn < best[1]:
-            best = (p, rn, it, conv)
-    p, rn, it, conv = best
+    solver = _batch_solver(model, nonneg=nonneg, max_iters=max_iters,
+                           lam0=lam0, lam_up=lam_up, lam_down=lam_down,
+                           tol=tol)
+    p, cost, it, conv = solver(jnp.asarray(F_np, dt),
+                               jnp.asarray(target_np, dt), starts)
+    p = np.asarray(p)
     return FitResult(
         params={n: float(v) for n, v in zip(names, p)},
-        residual_norm=rn, iterations=it, converged=conv)
+        residual_norm=float(np.sqrt(float(cost))),
+        iterations=int(it), converged=bool(conv))
 
 
 def geometric_mean_relative_error(pred: Sequence[float],

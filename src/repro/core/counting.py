@@ -86,11 +86,14 @@ _MEM_CONTIG = {"broadcast_in_dim", "pad", "slice", "squeeze",
 
 _COLLECTIVES = {"psum", "all_gather", "reduce_scatter", "all_to_all",
                 "ppermute", "pmax", "pmin", "psum_invariant",
-                "all_gather_invariant"}
+                "all_gather_invariant", "psum2"}
 
 
 def _coll_name(prim: str) -> str:
-    return prim[:-10] if prim.endswith("_invariant") else prim
+    if prim.endswith("_invariant"):
+        prim = prim[:-10]
+    # jax 0.4.x shard_map lowers psum to the distinct psum2 primitive
+    return prim[:-1] if prim.endswith("2") else prim
 
 _REDUCE = {"reduce_sum": "add", "reduce_max": "cmp", "reduce_min": "cmp",
            "reduce_prod": "mul", "argmax": "cmp", "argmin": "cmp",

@@ -10,15 +10,23 @@ Expressions are parsed with Python's ``ast`` into a safe, differentiable
 jax-numpy evaluator — so a model can be arbitrarily nonlinear (the overlap
 model of §7.4 uses ``smooth_step``), and calibration gets exact Jacobians
 via autodiff instead of the paper's symbolic differentiation.
+
+The evaluator is compiled ONCE per model and is fully vectorized: features
+enter as columns of a dense ``[n_rows, n_features]`` matrix (see
+:class:`FeatureTable`), parameters as a flat vector, and every measurement
+row is evaluated in one traced expression.  That makes the whole
+calibration pipeline (``repro.core.calibrate``) jit-compilable with no
+per-row Python dispatch.
 """
 from __future__ import annotations
 
 import ast
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Mapping, Sequence
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import overlap as _ovl
 from repro.core.counting import FeatureCounts
@@ -60,6 +68,86 @@ def _names(tree: ast.Expression) -> List[str]:
                    if isinstance(n, ast.Name) and n.id not in _FUNCS})
 
 
+def _param_dtype():
+    return jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Dense feature-matrix representation of a measurement table
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FeatureTable:
+    """A measurement table as a dense ``[n_rows, n_features]`` matrix.
+
+    ``feature_ids`` names the columns; ``row_names`` carries the measurement
+    kernel behind each row (bookkeeping, ignored by models).  This is the
+    native input of the batched calibration pipeline; a list of per-row
+    dicts (the original representation) is still accepted everywhere and
+    converted via :meth:`from_rows`.
+    """
+
+    feature_ids: List[str]
+    values: np.ndarray                      # [n_rows, n_features] float64
+    row_names: List[str] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.values = np.asarray(self.values, np.float64)
+        if self.values.ndim != 2 or \
+                self.values.shape[1] != len(self.feature_ids):
+            raise ValueError(
+                f"values must be [n_rows, {len(self.feature_ids)}], "
+                f"got {self.values.shape}")
+        self._col = {f: i for i, f in enumerate(self.feature_ids)}
+        if not self.row_names:
+            self.row_names = [f"row{i}" for i in range(len(self.values))]
+
+    def __len__(self) -> int:
+        return self.values.shape[0]
+
+    def column(self, feature_id: str) -> np.ndarray:
+        """Column vector for one feature; zeros if the feature is absent
+        (missing features read as 0, matching ``FeatureCounts``)."""
+        j = self._col.get(feature_id)
+        if j is None:
+            return np.zeros((len(self),), np.float64)
+        return self.values[:, j]
+
+    def row(self, i: int) -> Dict[str, float]:
+        d = {f: float(self.values[i, j]) for f, j in self._col.items()}
+        d["_kernel"] = self.row_names[i]
+        return d
+
+    def rows(self) -> List[Dict[str, float]]:
+        """Dict-per-row view (compatibility with the original API)."""
+        return [self.row(i) for i in range(len(self))]
+
+    @classmethod
+    def from_rows(cls, rows: Sequence[Mapping[str, float]]) -> "FeatureTable":
+        ids = sorted({k for r in rows for k in r if not k.startswith("_")})
+        vals = np.zeros((len(rows), len(ids)), np.float64)
+        for i, r in enumerate(rows):
+            for j, f in enumerate(ids):
+                vals[i, j] = float(r.get(f, 0.0))
+        names = [str(r.get("_kernel", f"row{i}")) for i, r in enumerate(rows)]
+        return cls(ids, vals, names)
+
+
+FeatureTableLike = Union[FeatureTable, Sequence[Mapping[str, float]]]
+
+
+def as_feature_table(table: FeatureTableLike) -> FeatureTable:
+    if isinstance(table, FeatureTable):
+        return table
+    return FeatureTable.from_rows(table)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
 @dataclass
 class Model:
     """output feature ≈ g(input features; parameters)."""
@@ -81,12 +169,14 @@ class Model:
             return eval(code, {"__builtins__": {}}, {**_FUNCS, **env})
 
         self._eval = evaluator
+        # jitted-solver cache, keyed by solver options (repro.core.calibrate)
+        self._solver_cache: Dict[tuple, Callable] = {}
 
     # -- feature bookkeeping ------------------------------------------------
     def all_features(self) -> List[str]:
         return [self.output_feature, *self.feature_names]
 
-    # -- evaluation -----------------------------------------------------------
+    # -- evaluation ---------------------------------------------------------
     def evaluate(self, param_values: Mapping[str, float],
                  feature_values: Mapping[str, float]):
         env = {n: jnp.asarray(param_values[n]) for n in self.param_names}
@@ -98,37 +188,68 @@ class Model:
                          counts: FeatureCounts):
         return float(self.evaluate(param_values, counts))
 
+    def batched_eval(self, p_vec: jax.Array, features: jax.Array
+                     ) -> jax.Array:
+        """Vectorized evaluation: ``features`` is ``[n_rows, n_features]``
+        with columns ordered as ``self.feature_names``; returns ``[n_rows]``
+        predictions.  Trace-safe: one jnp expression over whole columns."""
+        env: Dict[str, jax.Array] = {
+            n: p_vec[i] for i, n in enumerate(self.param_names)}
+        env.update({n: features[:, j]
+                    for j, n in enumerate(self.feature_names)})
+        out = self._eval(env)
+        # constant-only expressions broadcast to one value per row
+        return jnp.broadcast_to(out, (features.shape[0],))
+
+    # -- design matrix ------------------------------------------------------
+    def design_matrix(self, table: FeatureTableLike,
+                      *, scale_by_output: bool = True
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(F, target)`` for least-squares: ``F`` is ``[n_rows, n_feat]``
+        in ``self.feature_names`` column order, ``target`` the per-row fit
+        target.  With ``scale_by_output`` (paper §7.2) each row is divided
+        by its measured output value — a relative-error fit with target 1.
+        """
+        ft = as_feature_table(table)
+        if self.output_feature not in ft.feature_ids:
+            raise KeyError(
+                f"output feature {self.output_feature!r} not present in the "
+                f"feature table (columns: {ft.feature_ids})")
+        t = ft.column(self.output_feature)
+        F = np.stack([ft.column(n) for n in self.feature_names], axis=1) \
+            if self.feature_names else np.zeros((len(ft), 0))
+        if scale_by_output:
+            bad = np.flatnonzero(~(t > 0))
+            if bad.size:
+                i = int(bad[0])
+                raise ValueError(
+                    f"output feature {self.output_feature!r} must be "
+                    f"positive to scale rows by it; row {i} "
+                    f"({ft.row_names[i]!r}) has value {t[i]!r}")
+            F = F / t[:, None]
+            target = np.ones_like(t)
+        else:
+            target = t
+        return F, target
+
     # -- residual builder for calibration -----------------------------------
-    def residual_fn(self, feature_table: Sequence[Mapping[str, float]],
+    def residual_fn(self, feature_table: FeatureTableLike,
                     *, scale_by_output: bool = True):
         """Returns (resid(p_vec) -> r[k], p0, param_names).
 
-        ``feature_table``: one row per measurement kernel mapping feature id
-        → value, including the output feature.  With ``scale_by_output``
-        (paper §7.2) every row is divided by its output value, making the
-        fit relative-error based.
+        ``feature_table``: a :class:`FeatureTable` or one dict per
+        measurement kernel mapping feature id → value, including the output
+        feature.  The residual closes over constant on-device arrays and is
+        a single vectorized expression — jit/vmap/jacfwd-friendly.
         """
-        rows = []
-        for row in feature_table:
-            t = float(row[self.output_feature])
-            feats = {n: float(row.get(n, 0.0)) for n in self.feature_names}
-            if scale_by_output:
-                assert t > 0, "output feature must be positive to scale"
-                feats = {k: v / t for k, v in feats.items()}
-                rows.append((feats, 1.0))
-            else:
-                rows.append((feats, t))
-
-        pn = self.param_names
+        F_np, target_np = self.design_matrix(
+            feature_table, scale_by_output=scale_by_output)
+        dt = _param_dtype()
+        F = jnp.asarray(F_np, dt)
+        target = jnp.asarray(target_np, dt)
 
         def resid(p_vec: jax.Array) -> jax.Array:
-            outs = []
-            for feats, t in rows:
-                env = {n: p_vec[i] for i, n in enumerate(pn)}
-                env.update({k: jnp.asarray(v) for k, v in feats.items()})
-                outs.append(t - self._eval(env))
-            return jnp.stack(outs)
+            return target - self.batched_eval(p_vec, F)
 
-        p0 = jnp.full((len(pn),), 1e-9, jnp.float64
-                      if jax.config.read("jax_enable_x64") else jnp.float32)
-        return resid, p0, pn
+        p0 = jnp.full((len(self.param_names),), 1e-9, dt)
+        return resid, p0, self.param_names

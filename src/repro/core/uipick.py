@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.counting import FeatureCounts, count_fn
+from repro.core.model import FeatureTable
 
 
 class MatchCondition(enum.Enum):
@@ -154,29 +155,36 @@ class KernelCollection:
 # ---------------------------------------------------------------------------
 
 
+def gather_feature_table(
+    features: Sequence[str],
+    kernels: Sequence[MeasurementKernel],
+    *,
+    trials: int = 20,
+) -> FeatureTable:
+    """Dense timing table: one row per measurement kernel, one column per
+    feature id — the native input of the batched calibration pipeline.
+
+    ``f_wall_time_*`` output features are *measured* (black box); all other
+    features come from the automatic jaxpr counter.
+    """
+    features = list(features)
+    values = np.zeros((len(kernels), len(features)), np.float64)
+    for i, k in enumerate(kernels):
+        counts = k.counts()
+        for j, f in enumerate(features):
+            values[i, j] = k.time(trials=trials) \
+                if f.startswith("f_wall_time") else counts[f]
+    return FeatureTable(features, values, [k.name for k in kernels])
+
+
 def gather_feature_values(
     features: Sequence[str],
     kernels: Sequence[MeasurementKernel],
     *,
     trials: int = 20,
 ) -> List[Dict[str, float]]:
-    """One row per measurement kernel: feature id → value.
-
-    ``f_wall_time_*`` output features are *measured* (black box); all other
-    features come from the automatic jaxpr counter.
-    """
-    rows = []
-    for k in kernels:
-        counts = k.counts()
-        row: Dict[str, float] = {}
-        for f in features:
-            if f.startswith("f_wall_time"):
-                row[f] = k.time(trials=trials)
-            else:
-                row[f] = counts[f]
-        row["_kernel"] = k.name  # bookkeeping, ignored by models
-        rows.append(row)
-    return rows
+    """Dict-per-row view of :func:`gather_feature_table` (original API)."""
+    return gather_feature_table(features, kernels, trials=trials).rows()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,9 @@
+"""Pallas-TPU compatibility: ``pltpu.CompilerParams`` (jax >= 0.5) was
+named ``pltpu.TPUCompilerParams`` in jax 0.4.x.  Kernels import the alias
+from here so they compile under either version."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _dg_kernel(d_ref, ut_ref, o_ref):
     d = d_ref[0]            # [N, N]
@@ -45,7 +47,7 @@ def dg_diff(
         ],
         out_specs=pl.BlockSpec((1, N, be), lambda m, e: (m, 0, e)),
         out_shape=jax.ShapeDtypeStruct((M, N, K), ut.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(diff_mat, ut)

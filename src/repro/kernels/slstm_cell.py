@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _slstm_kernel(g_in_ref, r_ref, b_ref, y_ref, c_ref, n_ref, m_ref, h_ref,
                   *, steps: int, H: int, dh: int):
@@ -88,7 +90,7 @@ def slstm_cell(
             pltpu.VMEM((H, dh), jnp.float32),  # m
             pltpu.VMEM((H, dh), jnp.float32),  # h
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(g_in, r2, b_gates)

@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES_BY_NAME, get_config, shapes_for
 from repro.launch import specs as S
+from repro.compat import jit_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.presets import make_run_config
 from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
@@ -131,19 +132,24 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
             mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
             - mem["alias_bytes"])
         rec["memory"] = mem
-        ca = compiled.cost_analysis() or {}
+        ca = jit_cost_analysis(compiled)
         print({k: ca.get(k) for k in ("flops", "bytes accessed")})
         rec["xla_cost_analysis"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
         }
         if save_hlo:
-            import zstandard as zstd
-
-            hlo_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo.zst"
             txt = compiled.as_text()
-            hlo_path.write_bytes(zstd.ZstdCompressor(level=3).compress(
-                txt.encode()))
+            try:
+                import zstandard as zstd
+            except ModuleNotFoundError:  # optional dep: save uncompressed
+                hlo_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo"
+                hlo_path.write_text(txt)
+            else:
+                hlo_path = out_dir / \
+                    f"{arch}__{shape_name}__{mesh_kind}.hlo.zst"
+                hlo_path.write_bytes(zstd.ZstdCompressor(level=3).compress(
+                    txt.encode()))
             rec["hlo_path"] = str(hlo_path)
             rec["hlo_chars"] = len(txt)
         rec["status"] = "ok"

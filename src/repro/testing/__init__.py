@@ -1,0 +1,1 @@
+"""Test-support utilities (importable with ``PYTHONPATH=src``)."""

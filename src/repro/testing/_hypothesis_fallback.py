@@ -1,0 +1,103 @@
+"""Deterministic miniature stand-in for ``hypothesis`` (see proptest.py).
+
+Not a property-testing framework: no shrinking, no example database, no
+health checks — just repeated execution over seeded pseudo-random draws so
+``@given`` tests keep their coverage value when the real library is not
+installed.  Draws are seeded from the test's qualified name, so runs are
+reproducible and independent of execution order.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+@dataclass
+class _Strategy:
+    draw: Callable[[np.random.RandomState], Any]
+    label: str = "strategy"
+
+    def __repr__(self):
+        return self.label
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.randint(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        def draw(rng):
+            # log-uniform for strictly-positive ranges spanning >3 decades
+            # (a linear draw would never sample the small end)
+            if min_value > 0 and max_value / min_value > 1e3:
+                lo, hi = np.log(min_value), np.log(max_value)
+                return float(np.exp(rng.uniform(lo, hi)))
+            return float(rng.uniform(min_value, max_value))
+        return _Strategy(draw, f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.randint(0, 2)), "booleans()")
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randint(len(elements))],
+                         f"sampled_from({elements!r})")
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: Optional[int] = None) -> _Strategy:
+        max_size = max_size if max_size is not None else min_size + 8
+
+        def draw(rng) -> List[Any]:
+            n = int(rng.randint(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw, f"lists({elements!r})")
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording run options for :func:`given` (either decorator
+    order works — the attribute is read lazily at call time)."""
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            opts = getattr(wrapper, "_fallback_settings", None) or \
+                getattr(fn, "_fallback_settings", {})
+            max_examples = opts.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.RandomState(seed)
+            for example in range(max_examples):
+                drawn = tuple(s.draw(rng) for s in strats)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"fallback-hypothesis example {example} failed for "
+                        f"{fn.__qualname__} with drawn args {drawn!r}"
+                    ) from e
+        # NOTE: no functools.wraps / __wrapped__ — pytest would follow it to
+        # the original signature and treat the drawn arguments as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -1,0 +1,29 @@
+"""Property-testing front door for the test suite.
+
+The suite is written against ``hypothesis``; the ``test`` extra in
+``pyproject.toml`` installs it.  On environments where it is unavailable
+(the pinned CI container ships without it), a minimal deterministic
+fallback keeps the same tests collecting AND running as light fuzz tests
+instead of skipping: each ``@given`` test is executed ``max_examples``
+times with values drawn from a per-test seeded RNG.
+
+Usage in tests::
+
+    from repro.testing.proptest import hypothesis, st
+
+Only the API surface the suite uses is emulated by the fallback:
+``given``, ``settings(max_examples=, deadline=)`` and the strategies
+``integers``, ``floats``, ``lists``, ``sampled_from``, ``booleans``.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    from repro.testing import _hypothesis_fallback as hypothesis
+    st = hypothesis.strategies
+    HAVE_HYPOTHESIS = False
+
+__all__ = ["hypothesis", "st", "HAVE_HYPOTHESIS"]

@@ -1,6 +1,5 @@
 """Property tests: checkpoint round-trips for arbitrary dtypes/shapes."""
-import hypothesis
-import hypothesis.strategies as st
+from repro.testing.proptest import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

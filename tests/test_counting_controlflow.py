@@ -1,0 +1,94 @@
+"""Regression tests for control-flow recursion in the jaxpr feature counter
+(paper §5, Algorithm 1): exact counts through nested scan→cond→pjit, and
+single-visit accounting for unknown-trip-count ``while`` bodies."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.counting import count_fn
+
+
+def test_scan_cond_pjit_nested_exact():
+    """A pjit-ed matmul inside a cond branch inside a 5-step scan: the madd
+    count must be 5 (scan) × ½ (branch average) × n³, and the scan must
+    contribute exactly its trip count to f_sync_loop_steps."""
+    inner = jax.jit(lambda v: v @ v)
+
+    def f(x):
+        def body(c, _):
+            c = jax.lax.cond(c.sum() > 0, inner, lambda v: v, c)
+            return c, None
+
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    c = count_fn(f, jnp.ones((8, 8)))
+    assert c["f_op_float32_madd"] == 5 * (8 ** 3) / 2
+    assert c["f_sync_loop_steps"] == 5
+    assert c["f_sync_launch_kernel"] == 1
+
+
+def test_nested_scans_multiply_trip_counts():
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci), None
+
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    c = count_fn(f, jnp.ones((16,)))
+    assert c["f_op_float32_transc"] == 3 * 4 * 16
+    # loop-step bookkeeping: outer contributes 3, each outer step's inner
+    # scan contributes 4 → 3 + 3·4
+    assert c["f_sync_loop_steps"] == 3 + 3 * 4
+
+
+def test_while_body_counted_once_with_loop_step():
+    """Unknown trip count: the body is charged exactly once (the paper's
+    conservative accounting) and f_sync_loop_steps increments by 1."""
+
+    def f(x):
+        def cond(c):
+            return c[0, 0] < 100.0
+
+        def body(c):
+            return c @ c
+
+        return jax.lax.while_loop(cond, body, x)
+
+    c = count_fn(f, jnp.ones((4, 4)))
+    assert c["f_op_float32_madd"] == 4 ** 3
+    assert c["f_sync_loop_steps"] == 1
+
+
+def test_while_inside_scan_multiplies_by_scan_length_only():
+    """A while body under a 6-step scan is charged 6 × (body once)."""
+
+    def f(x):
+        def body(c, _):
+            c = jax.lax.while_loop(
+                lambda v: jnp.sum(v) < 10.0, lambda v: jnp.tanh(v), c)
+            return c, None
+
+        y, _ = jax.lax.scan(body, x, None, length=6)
+        return y
+
+    c = count_fn(f, jnp.ones((8,)))
+    assert c["f_op_float32_transc"] == 6 * 8
+    # 6 scan steps + 6 × one while visit
+    assert c["f_sync_loop_steps"] == 6 + 6
+
+
+def test_fori_loop_counts_as_scan():
+    """fori_loop with static bounds lowers to scan: trip count must be
+    applied, not the single-visit while accounting."""
+
+    def f(x):
+        return jax.lax.fori_loop(0, 7, lambda i, c: c * 1.5, x)
+
+    c = count_fn(f, jnp.ones((32,)))
+    assert c["f_op_float32_mul"] == 7 * 32
+    assert c["f_sync_loop_steps"] == 7

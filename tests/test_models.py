@@ -31,6 +31,7 @@ def test_forward_and_loss(arch, rng):
     assert loss > 0
 
 
+@pytest.mark.slow  # compiles forward+backward for every arch (~1 min total)
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_one_grad_step_reduces_loss(arch, rng):
     cfg = get_smoke_config(arch)

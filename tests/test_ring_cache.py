@@ -1,6 +1,5 @@
 """Property tests for the ring-buffer window cache decode path."""
-import hypothesis
-import hypothesis.strategies as st
+from repro.testing.proptest import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,8 +1,7 @@
 """Optimizer / data / checkpoint / runtime substrate tests."""
 import shutil
 
-import hypothesis
-import hypothesis.strategies as st
+from repro.testing.proptest import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -102,7 +101,7 @@ def test_checkpoint_roundtrip(tmp_path):
     abstract = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
     back = restore_tree(tmp_path / "ck", abstract)
-    for k, v in jax.tree.leaves_with_path(tree):
+    for k, v in jax.tree_util.tree_leaves_with_path(tree):
         pass
     np.testing.assert_array_equal(np.asarray(back["a"], np.float32),
                                   np.asarray(tree["a"], np.float32))

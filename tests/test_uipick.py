@@ -1,6 +1,5 @@
 """UIPiCK tag-filtering semantics (paper §7.1) + work removal (§7.1.1)."""
-import hypothesis
-import hypothesis.strategies as st
+from repro.testing.proptest import hypothesis, st
 import jax
 import jax.numpy as jnp
 import pytest
