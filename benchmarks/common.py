@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import functools
 import os
+from pathlib import Path
 from typing import Dict, List, Sequence
 
 from repro.core.calibrate import FitResult, fit_model, \
@@ -22,45 +23,69 @@ from repro.core.uipick import (
     MeasurementKernel,
     gather_feature_table,
 )
+from repro.profiles import (
+    DeviceFingerprint,
+    MachineProfile,
+    MeasurementCache,
+    ModelFit,
+    load_profile,
+    save_profile,
+)
+# canonical presets live in the package; benchmarks re-export the names
+from repro.profiles.presets import BASE_MODEL_EXPR, DEFAULT_OUTPUT_FEATURE
+from repro.profiles.presets import CALIBRATION_TAGS as CAL_TAGS
 
 TRIALS = int(os.environ.get("BENCH_TRIALS", "8"))
 
 COLLECTION = KernelCollection(ALL_GENERATORS)
 
-# The shared cost-explanatory model (paper §8.1 linear form, CPU-host
-# features): madd + contiguous/strided/gather memory + launch overhead.
-BASE_MODEL_EXPR = (
-    "p_madd * f_op_float32_madd "
-    "+ p_alu * (f_op_float32_add + f_op_float32_mul + f_op_float32_cmp) "
-    "+ p_mem * (f_mem_contig_float32_load + f_mem_contig_float32_store) "
-    "+ p_strided * (f_mem_strided_float32_load + f_mem_strided_float32_store) "
-    "+ p_gather * f_mem_gather_float32_load "
-    "+ p_concat * f_mem_concat_float32_store "
-    "+ p_launch * f_sync_launch_kernel"
-)
-
-CAL_TAGS = [
-    "flops_madd_pattern", "flops_dot_pattern", "mem_stream", "empty_kernel",
-    "dtype:float32",
-    "nelements:65536,1048576,4194304,16777216",
-    "iters:64,256,512",
-    "n_dot:128,256,384",
-    "n_arrays:1,2,4",
-]
-
 
 def linear_model() -> Model:
-    return Model("f_wall_time_cpu_host", BASE_MODEL_EXPR)
+    return Model(DEFAULT_OUTPUT_FEATURE, BASE_MODEL_EXPR)
+
+
+@functools.lru_cache(maxsize=1)
+def measurement_cache():
+    """Shared measurement cache, enabled by ``REPRO_MEASUREMENT_CACHE=DIR``:
+    reruns of the benchmark suite then re-time only kernels they have not
+    seen before (same-device, same-trials entries are reused)."""
+    root = os.environ.get("REPRO_MEASUREMENT_CACHE")
+    if not root:
+        return None
+    return MeasurementCache(root, DeviceFingerprint.local())
+
+
+def gather(model: Model, kernels: Sequence[MeasurementKernel],
+           *, trials: int = TRIALS):
+    """One-pass feature gather through the shared measurement cache."""
+    return gather_feature_table(model.all_features(), kernels,
+                                trials=trials, cache=measurement_cache())
 
 
 @functools.lru_cache(maxsize=1)
 def calibrated_base_model():
-    """Calibrate the shared microbenchmark model once per process."""
+    """Calibrate the shared microbenchmark model once per process.
+
+    With ``REPRO_PROFILE=PATH`` set, an existing profile at PATH is loaded
+    instead (zero measurements — the cross-machine calibrate-once path);
+    after a fresh calibration the profile is saved there for next time.
+    """
     model = linear_model()
+    prof_path = os.environ.get("REPRO_PROFILE")
+    if prof_path and Path(prof_path).exists():
+        profile = load_profile(
+            prof_path, expected_fingerprint=DeviceFingerprint.local())
+        return model, profile.fit_for(model).fit
     knls = COLLECTION.generate_kernels(
         CAL_TAGS, generator_match_cond=MatchCondition.INTERSECT)
-    table = gather_feature_table(model.all_features(), knls, trials=TRIALS)
+    table = gather(model, knls)
     fit = fit_model(model, table, nonneg=True)
+    if prof_path:
+        save_profile(MachineProfile(
+            fingerprint=DeviceFingerprint.local(),
+            fits={"base": ModelFit.from_fit(model, fit)},
+            trials=TRIALS,
+            kernel_names=[k.name for k in knls]), prof_path)
     return model, fit
 
 

@@ -13,12 +13,13 @@ from benchmarks.common import (
     TRIALS,
     calibrated_base_model,
     evaluate_kernels,
+    gather,
     linear_model,
     predict,
 )
 from repro.core.calibrate import fit_model, geometric_mean_relative_error
 from repro.core.model import Model
-from repro.core.uipick import MatchCondition, gather_feature_table
+from repro.core.uipick import MatchCondition
 
 
 def fig1_matmul_simple() -> List[str]:
@@ -33,7 +34,7 @@ def fig1_matmul_simple() -> List[str]:
     cal = COLLECTION.generate_kernels(
         ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
          "n:256,384,640,1024"])
-    table = gather_feature_table(model.all_features(), cal, trials=TRIALS)
+    table = gather(model, cal)
     fit = fit_model(model, table, nonneg=True)
     test = COLLECTION.generate_kernels(
         ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
@@ -49,7 +50,7 @@ def fig2_madd_component() -> List[str]:
     cal = COLLECTION.generate_kernels(
         ["flops_madd_pattern", "dtype:float32",
          "nelements:65536", "iters:64,128,256,512"])
-    table = gather_feature_table(model.all_features(), cal, trials=TRIALS)
+    table = gather(model, cal)
     fit = fit_model(model, table, nonneg=True)
     test = COLLECTION.generate_kernels(
         ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
@@ -74,7 +75,7 @@ def fig5_overlap() -> List[str]:
     knls = COLLECTION.generate_kernels(
         ["overlap_pattern", "dtype:float32", "nelements:16777216",
          "m:0,16,256,1024,4096,16384,65536"])
-    table = gather_feature_table(model.all_features(), knls, trials=TRIALS)
+    table = gather(model, knls)
     fit = fit_model(model, table)
     out, preds, meas = [], [], []
     for k, r in zip(knls, table.rows()):

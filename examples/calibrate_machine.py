@@ -1,60 +1,42 @@
 """Machine calibration — the once-per-device black-box step (paper §7).
 
-Runs the full UIPiCK microbenchmark battery on this host, calibrates the
-shared cost-explanatory model, and writes the machine profile to JSON so
-later sessions (variant selection, straggler expectations, schedulers)
-can load it without re-measuring.
+Runs the UIPiCK microbenchmark battery on this host, calibrates the shared
+cost-explanatory model, and writes the machine profile atomically so later
+sessions (variant selection, straggler expectations, schedulers, the
+benchmark suite via ``REPRO_PROFILE``) load it without re-measuring.
 
-  PYTHONPATH=src python examples/calibrate_machine.py --out machine.json
+This example is a thin wrapper over the packaged CLI — prefer invoking it
+directly:
+
+    PYTHONPATH=src python -m repro.calibrate \
+        --out machine_profile.json \
+        --cache-dir ~/.cache/repro-measurements --trials 8
+
+CLI reference (``python -m repro.calibrate --help``):
+
+  --out PATH            profile JSON destination (atomic tmp+fsync+rename)
+  --cache-dir DIR       content-addressed measurement cache keyed by
+                        (kernel name, arg sizes, device fingerprint,
+                        trials); a warm rerun performs ZERO kernel timings
+                        and produces a byte-identical profile
+  --tags TAG [TAG ...]  UIPiCK filter tags selecting the battery
+  --match COND          identical | subset | superset | intersect
+  --expr EXPR           model expression to calibrate
+  --output-feature F    measured output feature id
+  --name NAME           fit name inside the profile (default "base")
+  --trials N            timing trials per measurement kernel
+  --smoke               tiny battery + 2-parameter model (CI-sized)
+  --expect-zero-timings exit 1 unless the cache was fully warm
+
+Consuming a profile afterwards:
+
+    from repro.profiles import load_profile
+    fit = load_profile("machine_profile.json").fit_for(model)
+    t_predicted = model.evaluate(fit.params, kernel.counts())
 """
-import argparse
-import json
-import pathlib
-import platform
 import sys
 
-# repo root on sys.path so `benchmarks.common` resolves when invoked as
-# `python examples/calibrate_machine.py` (script dir is examples/)
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
-
-from benchmarks.common import BASE_MODEL_EXPR, CAL_TAGS, TRIALS
-from repro.core.calibrate import fit_model
-from repro.core.model import Model
-from repro.core.uipick import (
-    ALL_GENERATORS,
-    KernelCollection,
-    MatchCondition,
-    gather_feature_table,
-)
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="machine_profile.json")
-    ap.add_argument("--trials", type=int, default=TRIALS)
-    args = ap.parse_args()
-
-    model = Model("f_wall_time_cpu_host", BASE_MODEL_EXPR)
-    knls = KernelCollection(ALL_GENERATORS).generate_kernels(
-        CAL_TAGS, generator_match_cond=MatchCondition.INTERSECT)
-    print(f"running {len(knls)} measurement kernels "
-          f"({args.trials} trials each)…")
-    table = gather_feature_table(model.all_features(), knls,
-                                 trials=args.trials)
-    fit = fit_model(model, table, nonneg=True)
-    profile = {
-        "machine": platform.processor() or platform.machine(),
-        "model_expr": BASE_MODEL_EXPR,
-        "params": fit.params,
-        "residual_norm": fit.residual_norm,
-        "converged": fit.converged,
-        "n_measurement_kernels": len(knls),
-    }
-    with open(args.out, "w") as f:
-        json.dump(profile, f, indent=2)
-    print(json.dumps(profile, indent=2))
-    print(f"\nwritten to {args.out}")
-
+from repro.profiles.cli import main
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,4 +1,4 @@
-"""Quickstart: the paper's §2 flow in ~40 lines.
+"""Quickstart: the paper's §2 flow in ~50 lines.
 
 1. define a cost model over automatically-counted kernel features
 2. generate measurement kernels with UIPiCK filter tags
@@ -7,11 +7,30 @@
 5. predict execution time for an unseen kernel
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+With ``--profile machine.json`` the calibrated parameters persist: the
+first run measures and saves, every later run loads the profile and
+predicts without re-measuring (the paper's calibrate-once workflow).
+``--cache-dir DIR`` additionally caches raw per-kernel measurements.
 """
+import argparse
+import pathlib
+
 from repro.core.calibrate import fit_model
 from repro.core.model import Model
-from repro.core.uipick import ALL_GENERATORS, KernelCollection, \
-    gather_feature_table
+from repro.core.uipick import ALL_GENERATORS, CountingTimer, \
+    KernelCollection, gather_feature_table
+from repro.profiles import DeviceFingerprint, MachineProfile, \
+    MeasurementCache, ModelFit, load_profile, save_profile
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--profile", default=None,
+                help="machine-profile JSON: loaded if it exists, "
+                     "written after calibration otherwise")
+ap.add_argument("--cache-dir", default=None,
+                help="measurement cache directory (warm runs: 0 timings)")
+ap.add_argument("--trials", type=int, default=8)
+args = ap.parse_args()
 
 # 1. the model: madd cost + launch overhead (paper eq. 1)
 model = Model(
@@ -27,19 +46,44 @@ filter_tags = [
 m_knls = KernelCollection(ALL_GENERATORS).generate_kernels(filter_tags)
 print(f"measurement kernels: {[k.name for k in m_knls]}")
 
-# 3. feature values: symbolic counts + measured wall time, as one dense
-#    [n_kernels, n_features] table (the batched calibration input)
-table = gather_feature_table(model.all_features(), m_knls, trials=8)
+fingerprint = DeviceFingerprint.local()
+profile = None
+if args.profile and pathlib.Path(args.profile).exists():
+    profile = load_profile(args.profile, expected_fingerprint=fingerprint)
 
-# 4. calibrate (all restarts solve in one jit-compiled call)
-fit = fit_model(model, table, nonneg=True)
-print(f"calibrated: {fit.params}  (residual {fit.residual_norm:.3g})")
-print(f"implied madd rate: {1.0 / fit.params['p_f32madd']:.3e} madd/s")
+if profile is not None:
+    # calibrated earlier on this machine: zero measurements needed
+    params = profile.fit_for(model).params
+    print(f"loaded profile {args.profile} (0 kernel timings): {params}")
+else:
+    # 3. feature values: symbolic counts + measured wall time, as one dense
+    #    [n_kernels, n_features] table (the batched calibration input)
+    cache = MeasurementCache(args.cache_dir, fingerprint) \
+        if args.cache_dir else None
+    timer = CountingTimer()
+    table = gather_feature_table(model.all_features(), m_knls,
+                                 trials=args.trials, timer=timer,
+                                 cache=cache)
+    print(f"gathered {len(m_knls)} rows with {timer.calls} timing passes")
+
+    # 4. calibrate (all restarts solve in one jit-compiled call)
+    fit = fit_model(model, table, nonneg=True)
+    params = fit.params
+    print(f"calibrated: {params}  (residual {fit.residual_norm:.3g})")
+    if args.profile:
+        save_profile(MachineProfile(
+            fingerprint=fingerprint,
+            fits={"quickstart": ModelFit.from_fit(model, fit)},
+            trials=args.trials,
+            kernel_names=[k.name for k in m_knls]), args.profile)
+        print(f"profile saved to {args.profile}")
+
+print(f"implied madd rate: {1.0 / params['p_f32madd']:.3e} madd/s")
 
 # 5. predict an unseen size and check
 (test,) = KernelCollection(ALL_GENERATORS).generate_kernels(
     ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16", "n:768"])
-pred = float(model.evaluate(fit.params, test.counts()))
-meas = test.time(trials=8)
+pred = float(model.evaluate(params, test.counts()))
+meas = test.time(trials=args.trials)
 print(f"n=768:  predicted {pred * 1e3:.2f} ms   measured {meas * 1e3:.2f} ms "
       f"  rel.err {abs(pred - meas) / meas * 100:.1f}%")

@@ -1,0 +1,12 @@
+"""``python -m repro.calibrate`` — machine-calibration entry point.
+
+Thin shim over :mod:`repro.profiles.cli`; see that module (or ``--help``)
+for the flag reference.  Not to be confused with :mod:`repro.core.calibrate`
+(the Levenberg-Marquardt fitting engine), which this CLI drives.
+"""
+import sys
+
+from repro.profiles.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,3 +1,9 @@
-from repro.checkpoint.manager import CheckpointManager, restore_tree, save_tree
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    atomic_write_json,
+    restore_tree,
+    save_tree,
+)
 
-__all__ = ["CheckpointManager", "restore_tree", "save_tree"]
+__all__ = ["CheckpointManager", "atomic_write_json", "restore_tree",
+           "save_tree"]

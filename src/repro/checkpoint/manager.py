@@ -20,6 +20,7 @@ import json
 import os
 import queue
 import shutil
+import tempfile
 import threading
 import time
 from pathlib import Path
@@ -27,6 +28,34 @@ from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+
+def atomic_write_json(path: Path, payload: Any) -> None:
+    """Crash-safe JSON write: the same tmp + fsync + rename discipline as
+    :func:`save_tree`, for single-file artifacts (machine profiles,
+    measurement-cache entries, manifests).  A crash mid-write leaves either
+    the old file or a ``*.tmp`` orphan — never a torn JSON document.
+
+    Output is deterministic (sorted keys), so identical payloads produce
+    byte-identical files."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    # private per-writer tmp file: concurrent writers of the same path must
+    # each rename a complete document, never interleave into a shared tmp
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name,
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def _flatten(tree: Any) -> Dict[str, Any]:
@@ -61,9 +90,7 @@ def save_tree(tree: Any, directory: Path, *, extra: Optional[Dict] = None):
                                  "dtype": str(np.asarray(v).dtype),
                                  "stored_as": stored_as,
                                  "shape": list(arr.shape)})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    with open(tmp / "manifest.json", "rb") as f:
-        os.fsync(f.fileno())
+    atomic_write_json(tmp / "manifest.json", manifest)
     if directory.exists():
         shutil.rmtree(directory)
     os.rename(tmp, directory)

@@ -42,6 +42,21 @@ class FitResult:
     def __getitem__(self, k):
         return self.params[k]
 
+    # -- (de)serialization, used by repro.profiles --------------------------
+    def to_dict(self) -> Dict[str, object]:
+        return {"params": dict(self.params),
+                "residual_norm": self.residual_norm,
+                "iterations": self.iterations,
+                "converged": self.converged}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "FitResult":
+        return cls(params={str(k): float(v)
+                           for k, v in dict(d["params"]).items()},
+                   residual_norm=float(d["residual_norm"]),
+                   iterations=int(d["iterations"]),
+                   converged=bool(d["converged"]))
+
 
 # ---------------------------------------------------------------------------
 # Trace-friendly LM core

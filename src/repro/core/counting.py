@@ -21,6 +21,7 @@ Counted feature classes (the TPU translation of the paper's features):
 """
 from __future__ import annotations
 
+import itertools
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
@@ -177,7 +178,10 @@ def _count_eqn(eqn, counts: FeatureCounts, mult: float):
         return
     if prim == "while":
         inner = count_jaxpr_counts(eqn.params["body_jaxpr"].jaxpr)
-        for k, v in inner.items():  # unknown trip count: count body once
+        # unknown trip count: charge body AND predicate once per visit (the
+        # predicate runs trips+1 times; single-visit accounting charges 1)
+        pred = count_jaxpr_counts(eqn.params["cond_jaxpr"].jaxpr)
+        for k, v in inner.merged(pred).items():
             counts.add(k, v * mult)
         counts.add("f_sync_loop_steps", mult)
         return
@@ -262,8 +266,15 @@ def parametric_counts(
             feature_ids.update(cache[key].keys())
         return cache[key]
 
-    # touch one probe to learn the feature set
-    probe(**{v: base for v in var_degrees})
+    # probe the FULL interpolation grid before enumerating features: a
+    # feature may be absent at the base size yet appear at larger probes
+    # (e.g. a scan that vanishes when n == tile), and freezing the feature
+    # set after one probe would silently drop its polynomial
+    names = sorted(var_degrees)
+    grids = [[base + scale * i for i in range(var_degrees[v] + 1)]
+             for v in names]
+    for combo in itertools.product(*grids):
+        probe(**dict(zip(names, combo)))
     polys: Dict[str, ParametricCount] = {}
     assumptions = tuple(f"{v} % {scale} == 0" for v in var_degrees)
     for fid in sorted(feature_ids):

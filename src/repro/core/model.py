@@ -176,6 +176,18 @@ class Model:
     def all_features(self) -> List[str]:
         return [self.output_feature, *self.feature_names]
 
+    def signature(self) -> str:
+        """Stable content identity of this model (output feature + expr).
+
+        Machine profiles store fitted parameters under this signature so a
+        loaded fit can be matched to the model it was calibrated for, and
+        silent expression drift surfaces as a clear lookup error instead of
+        nonsense predictions."""
+        import hashlib
+        h = hashlib.sha256(
+            f"{self.output_feature}\n{self.expr}".encode()).hexdigest()
+        return h[:16]
+
     # -- evaluation ---------------------------------------------------------
     def evaluate(self, param_values: Mapping[str, float],
                  feature_values: Mapping[str, float]):

@@ -46,19 +46,33 @@ class MeasurementKernel:
     sizes: Dict[str, int] = field(default_factory=dict)
 
     _counts: Optional[FeatureCounts] = None
+    _jitted: Optional[Callable] = None
 
     def counts(self) -> FeatureCounts:
         if self._counts is None:
             self._counts = count_fn(self.fn, *self.make_args())
         return self._counts
 
+    def jitted(self) -> Callable:
+        """The jit-compiled kernel, traced once and cached on the kernel so
+        repeated timings don't pay re-tracing."""
+        if self._jitted is None:
+            self._jitted = jax.jit(self.fn)
+        return self._jitted
+
     def time(self, *, trials: int = 20, warmup: int = 3) -> float:
-        """Median wall-clock seconds per call on the host device."""
-        jf = jax.jit(self.fn)
+        """Median wall-clock seconds per call on the host device.
+
+        ``warmup=0`` skips the warmup entirely (the first trial then pays
+        compilation — useful for cold-start measurement).
+        """
+        jf = self.jitted()
         args = self.make_args()
+        out = None
         for _ in range(warmup):
             out = jf(*args)
-        jax.block_until_ready(out)
+        if out is not None:
+            jax.block_until_ready(out)
         ts = []
         for _ in range(trials):
             t0 = time.perf_counter()
@@ -155,25 +169,72 @@ class KernelCollection:
 # ---------------------------------------------------------------------------
 
 
+def default_timer(kernel: MeasurementKernel, trials: int) -> float:
+    """The default injectable timer: one real timing pass on the kernel."""
+    return kernel.time(trials=trials)
+
+
+class CountingTimer:
+    """Injectable timer wrapper that counts how many timing passes actually
+    ran — the observable the measurement cache's zero-timing warm-path
+    guarantee is asserted against (tests, CI smoke, CLI summary)."""
+
+    def __init__(self, timer: Callable[[MeasurementKernel, int], float]
+                 = default_timer):
+        self._timer = timer
+        self.calls = 0
+
+    def __call__(self, kernel: MeasurementKernel, trials: int) -> float:
+        self.calls += 1
+        return self._timer(kernel, trials)
+
+
 def gather_feature_table(
     features: Sequence[str],
     kernels: Sequence[MeasurementKernel],
     *,
     trials: int = 20,
+    timer: Optional[Callable[[MeasurementKernel, int], float]] = None,
+    cache: Optional[Any] = None,
 ) -> FeatureTable:
     """Dense timing table: one row per measurement kernel, one column per
     feature id — the native input of the batched calibration pipeline.
 
     ``f_wall_time_*`` output features are *measured* (black box); all other
-    features come from the automatic jaxpr counter.
+    features come from the automatic jaxpr counter.  One pass per kernel:
+    each kernel is timed at most ONCE per gather regardless of how many
+    wall-time columns the table has, and its jaxpr is counted once.
+
+    ``timer(kernel, trials) -> seconds`` makes the measurement injectable
+    (deterministic tests, counters); ``cache`` is a
+    :class:`repro.profiles.MeasurementCache`-shaped object — on a cache hit
+    neither the timer nor the jaxpr counter runs, so a warm recalibration
+    performs zero timings.
     """
     features = list(features)
+    timer = timer or default_timer
+    wall_cols = [j for j, f in enumerate(features)
+                 if f.startswith("f_wall_time")]
+    count_cols = [(j, f) for j, f in enumerate(features)
+                  if not f.startswith("f_wall_time")]
     values = np.zeros((len(kernels), len(features)), np.float64)
     for i, k in enumerate(kernels):
-        counts = k.counts()
-        for j, f in enumerate(features):
-            values[i, j] = k.time(trials=trials) \
-                if f.startswith("f_wall_time") else counts[f]
+        entry = cache.get(k, trials) if cache is not None else None
+        if entry is not None:
+            counts, wall = entry.counts, entry.wall_time
+            if wall_cols and wall is None:
+                # entry was gathered counts-only; backfill the timing
+                wall = timer(k, trials)
+                cache.put(k, trials, wall, counts)
+        else:
+            counts = k.counts()
+            wall = timer(k, trials) if wall_cols else None
+            if cache is not None:
+                cache.put(k, trials, wall, counts)
+        for j, f in count_cols:
+            values[i, j] = counts[f]
+        for j in wall_cols:
+            values[i, j] = wall
     return FeatureTable(features, values, [k.name for k in kernels])
 
 
@@ -182,9 +243,12 @@ def gather_feature_values(
     kernels: Sequence[MeasurementKernel],
     *,
     trials: int = 20,
+    timer: Optional[Callable[[MeasurementKernel, int], float]] = None,
+    cache: Optional[Any] = None,
 ) -> List[Dict[str, float]]:
     """Dict-per-row view of :func:`gather_feature_table` (original API)."""
-    return gather_feature_table(features, kernels, trials=trials).rows()
+    return gather_feature_table(features, kernels, trials=trials,
+                                timer=timer, cache=cache).rows()
 
 
 # ---------------------------------------------------------------------------

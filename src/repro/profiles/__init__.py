@@ -1,0 +1,39 @@
+"""Persistent machine profiles + incremental measurement cache.
+
+The cross-machine half of the paper's promise: calibrate once per device
+(``python -m repro.calibrate``), ship the resulting profile, and predict
+anywhere without re-measuring.
+
+* :class:`DeviceFingerprint` — hardware identity from ``jax.devices()``
+* :class:`MeasurementCache` — content-addressed timing/count store; a warm
+  ``gather_feature_table`` performs zero timings
+* :class:`MachineProfile` / :func:`save_profile` / :func:`load_profile` —
+  atomic JSON profile artifacts with strict validation
+"""
+from repro.profiles.cache import (
+    CACHE_SCHEMA_VERSION,
+    CacheEntry,
+    MeasurementCache,
+)
+from repro.profiles.fingerprint import DeviceFingerprint
+from repro.profiles.profile import (
+    PROFILE_SCHEMA_VERSION,
+    MachineProfile,
+    ModelFit,
+    ProfileError,
+    load_profile,
+    save_profile,
+)
+
+__all__ = [
+    "CACHE_SCHEMA_VERSION",
+    "CacheEntry",
+    "DeviceFingerprint",
+    "MachineProfile",
+    "MeasurementCache",
+    "ModelFit",
+    "PROFILE_SCHEMA_VERSION",
+    "ProfileError",
+    "load_profile",
+    "save_profile",
+]

@@ -1,0 +1,113 @@
+"""Content-addressed measurement cache (the ROADMAP "caching" axis).
+
+Timing a measurement-kernel battery is the expensive, noisy part of
+calibration; the counts are deterministic and the timings are reusable as
+long as nothing they depend on changed.  Each cache entry is one JSON file
+named by the SHA-256 of its *key* — (kernel name, argument sizes, device
+fingerprint, trials count, cache schema) — so:
+
+* a warm :func:`repro.core.uipick.gather_feature_table` run performs ZERO
+  kernel timings and zero jaxpr counting passes,
+* changing the device, the trials count, or the kernel's sizes misses the
+  cache naturally (different key → different file), and
+* the store is incremental: adding kernels to a battery only measures the
+  new ones.
+
+Corrupt or foreign entries are treated as misses and overwritten, never
+trusted.
+
+Known limitation: the key deliberately does NOT include the kernel's code
+(hashing its jaxpr would require re-tracing every kernel on warm runs,
+which is exactly the work the cache exists to skip).  If you edit a
+generator's kernel body without renaming it, bump ``CACHE_SCHEMA_VERSION``
+or clear the cache directory — otherwise stale timings are reused.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, Mapping, Optional
+
+from repro.checkpoint.manager import atomic_write_json
+from repro.core.counting import FeatureCounts
+
+CACHE_SCHEMA_VERSION = 1
+
+
+@dataclass
+class CacheEntry:
+    """One kernel's reusable measurement: its counted features and (median)
+    wall time.  ``wall_time`` is None for counts-only gathers."""
+
+    counts: FeatureCounts
+    wall_time: Optional[float]
+
+
+class MeasurementCache:
+    """File-per-entry content-addressed store under ``root``.
+
+    Duck-typed against ``gather_feature_table``'s ``cache`` parameter:
+    ``get(kernel, trials) -> CacheEntry | None`` and
+    ``put(kernel, trials, wall_time, counts)``.  ``hits``/``misses``
+    counters make cache behavior observable to the CLI and tests.
+    """
+
+    def __init__(self, root, fingerprint):
+        self.root = Path(root)
+        self.fingerprint = fingerprint
+        self.hits = 0
+        self.misses = 0
+
+    # -- keying --------------------------------------------------------------
+    def _key_payload(self, kernel_name: str, sizes: Mapping[str, int],
+                     trials: int) -> Dict[str, Any]:
+        return {
+            "schema": CACHE_SCHEMA_VERSION,
+            "kernel": kernel_name,
+            "sizes": {k: int(v) for k, v in sorted(sizes.items())},
+            "fingerprint": self.fingerprint.id,
+            "trials": int(trials),
+        }
+
+    def _path(self, key_payload: Dict[str, Any]) -> Path:
+        digest = hashlib.sha256(
+            json.dumps(key_payload, sort_keys=True).encode()).hexdigest()
+        return self.root / f"{digest}.json"
+
+    # -- store ---------------------------------------------------------------
+    def get(self, kernel, trials: int) -> Optional[CacheEntry]:
+        key = self._key_payload(kernel.name, kernel.sizes, trials)
+        path = self._path(key)
+        try:
+            payload = json.loads(path.read_text())
+        except (OSError, ValueError):
+            self.misses += 1
+            return None
+        # never trust an entry whose shape is wrong or whose embedded key
+        # doesn't match the request (schema drift, hand-edited files, hash
+        # collisions)
+        if not isinstance(payload, dict) \
+                or payload.get("key") != key \
+                or not isinstance(payload.get("counts"), dict):
+            self.misses += 1
+            return None
+        self.hits += 1
+        counts = FeatureCounts(
+            {str(k): float(v) for k, v in payload["counts"].items()})
+        wall = payload.get("wall_time")
+        return CacheEntry(counts, float(wall) if wall is not None else None)
+
+    def put(self, kernel, trials: int, wall_time: Optional[float],
+            counts: Mapping[str, float]) -> None:
+        key = self._key_payload(kernel.name, kernel.sizes, trials)
+        atomic_write_json(self._path(key), {
+            "key": key,
+            "wall_time": wall_time,
+            "counts": {k: float(v) for k, v in sorted(counts.items())},
+        })
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob("*.json")) \
+            if self.root.is_dir() else 0

@@ -1,0 +1,126 @@
+"""``python -m repro.calibrate`` — the once-per-machine calibration CLI.
+
+Wires the whole pipeline: UIPiCK filter tags → measurement-kernel
+generation → feature gathering (through the content-addressed measurement
+cache) → Levenberg-Marquardt fit → atomic profile save.  A warm rerun with
+the same cache directory performs ZERO kernel timings (every kernel hits
+the cache) and writes a byte-identical profile; ``--expect-zero-timings``
+turns that guarantee into an exit code for CI.
+
+Examples:
+
+    # full battery, persistent cache, profile artifact
+    python -m repro.calibrate --out machine_profile.json \
+        --cache-dir ~/.cache/repro-measurements --trials 8
+
+    # quick smoke battery; second run must not time anything
+    python -m repro.calibrate --smoke --cache-dir /tmp/mc --out p1.json
+    python -m repro.calibrate --smoke --cache-dir /tmp/mc --out p2.json \
+        --expect-zero-timings
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.core.calibrate import fit_model
+from repro.core.model import Model
+from repro.core.uipick import (
+    ALL_GENERATORS,
+    CountingTimer,
+    KernelCollection,
+    MatchCondition,
+    gather_feature_table,
+)
+from repro.profiles.cache import MeasurementCache
+from repro.profiles.fingerprint import DeviceFingerprint
+from repro.profiles.presets import (
+    BASE_MODEL_EXPR,
+    CALIBRATION_TAGS,
+    DEFAULT_OUTPUT_FEATURE,
+    SMOKE_MODEL_EXPR,
+    SMOKE_TAGS,
+)
+from repro.profiles.profile import MachineProfile, ModelFit, save_profile
+
+_MATCH = {c.name.lower(): c for c in MatchCondition}
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.calibrate",
+        description="Calibrate this machine's black-box cost model and "
+                    "save a reusable profile.")
+    ap.add_argument("--out", default="machine_profile.json",
+                    help="profile JSON destination (atomic write)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="content-addressed measurement cache directory; "
+                         "warm reruns perform zero timings")
+    ap.add_argument("--tags", nargs="+", default=None,
+                    help="UIPiCK filter tags (default: the full "
+                         "calibration battery)")
+    ap.add_argument("--match", choices=sorted(_MATCH), default="intersect",
+                    help="generator tag match condition (paper §7.1)")
+    ap.add_argument("--expr", default=None,
+                    help="model expression to calibrate "
+                         "(default: the base linear model)")
+    ap.add_argument("--output-feature", default=DEFAULT_OUTPUT_FEATURE,
+                    help="measured output feature id")
+    ap.add_argument("--name", default="base",
+                    help="name of the fit inside the profile")
+    ap.add_argument("--trials", type=int, default=8,
+                    help="timing trials per measurement kernel")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the tiny smoke battery + 2-parameter model "
+                         "(CI-sized)")
+    ap.add_argument("--expect-zero-timings", action="store_true",
+                    help="exit 1 unless every kernel came from the cache "
+                         "(no timing passes ran)")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    expr = args.expr or (SMOKE_MODEL_EXPR if args.smoke else BASE_MODEL_EXPR)
+    tags = args.tags or (SMOKE_TAGS if args.smoke else CALIBRATION_TAGS)
+
+    fingerprint = DeviceFingerprint.local()
+    model = Model(args.output_feature, expr)
+    kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
+        tags, generator_match_cond=_MATCH[args.match])
+    if not kernels:
+        print(f"no measurement kernels match tags {tags!r}", file=sys.stderr)
+        return 2
+
+    cache = MeasurementCache(args.cache_dir, fingerprint) \
+        if args.cache_dir else None
+    timer = CountingTimer()
+    print(f"[calibrate] device={fingerprint.id} kernels={len(kernels)} "
+          f"trials={args.trials} cache={args.cache_dir or 'off'}")
+    table = gather_feature_table(model.all_features(), kernels,
+                                 trials=args.trials, timer=timer,
+                                 cache=cache)
+    fit = fit_model(model, table, nonneg=True)
+
+    profile = MachineProfile(
+        fingerprint=fingerprint,
+        fits={args.name: ModelFit.from_fit(model, fit)},
+        trials=args.trials,
+        kernel_names=[k.name for k in kernels])
+    save_profile(profile, args.out)
+
+    hits = cache.hits if cache is not None else 0
+    print(f"[calibrate] timings_performed={timer.calls} cache_hits={hits}")
+    print(f"[calibrate] fit residual={fit.residual_norm:.3g} "
+          f"converged={fit.converged} params={fit.params}")
+    print(f"[calibrate] profile -> {args.out}")
+    if args.expect_zero_timings and timer.calls:
+        print(f"[calibrate] FAIL: expected a fully warm cache but "
+              f"{timer.calls} kernels were timed", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Device fingerprinting for shippable machine profiles.
+
+A calibrated profile (and every cached measurement) is only valid on the
+hardware it was measured on — the paper's whole point is that the *method*
+is cross-machine while the *numbers* are per-machine.  The fingerprint is
+the identity that keys both artifacts: derived from ``jax.devices()``, it
+changes whenever the accelerator platform, device kind, or device count
+changes, which is exactly when timings stop being transferable.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+
+
+@dataclass(frozen=True)
+class DeviceFingerprint:
+    """Identity of the measured machine, as seen through ``jax.devices()``."""
+
+    platform: str       # "cpu" / "gpu" / "tpu"
+    device_kind: str    # e.g. "cpu", "NVIDIA A100-SXM4-40GB", "TPU v4"
+    n_devices: int
+
+    @classmethod
+    def local(cls) -> "DeviceFingerprint":
+        devs = jax.devices()
+        return cls(platform=devs[0].platform,
+                   device_kind=str(devs[0].device_kind),
+                   n_devices=len(devs))
+
+    @property
+    def id(self) -> str:
+        """Stable slug usable in filenames and cache keys."""
+        kind = re.sub(r"[^A-Za-z0-9]+", "-", self.device_kind).strip("-")
+        return f"{self.platform}_{kind}_x{self.n_devices}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"platform": self.platform, "device_kind": self.device_kind,
+                "n_devices": self.n_devices}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "DeviceFingerprint":
+        return cls(platform=str(d["platform"]),
+                   device_kind=str(d["device_kind"]),
+                   n_devices=int(d["n_devices"]))

@@ -1,0 +1,165 @@
+"""Persistent machine profiles: calibrate once per GPU, predict anywhere.
+
+A :class:`MachineProfile` is the shippable artifact the paper's workflow
+ends in — the device fingerprint plus one fitted parameter vector (and fit
+diagnostics) per cost model.  Saved as a single JSON document with the
+checkpoint manager's atomic tmp + fsync + rename discipline, so a crash
+mid-save never corrupts an existing profile.
+
+Loading is strict: corrupt files, missing fields, wrong schema versions,
+and (optionally) foreign device fingerprints all raise :class:`ProfileError`
+with a message naming the problem — a profile that can't be trusted must
+never silently produce predictions.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Mapping, Optional
+
+from repro.checkpoint.manager import atomic_write_json
+from repro.core.calibrate import FitResult
+from repro.core.model import Model
+from repro.profiles.fingerprint import DeviceFingerprint
+
+PROFILE_SCHEMA_VERSION = 1
+
+
+class ProfileError(RuntimeError):
+    """A profile file that cannot be trusted (corrupt, wrong schema,
+    wrong machine)."""
+
+
+@dataclass
+class ModelFit:
+    """One calibrated model: its definition, fitted ``p_*`` parameters, and
+    fit diagnostics.  ``signature`` ties the parameters to the exact
+    expression they were fitted for."""
+
+    output_feature: str
+    expr: str
+    fit: FitResult
+    signature: str = ""
+
+    def __post_init__(self):
+        expect = Model(self.output_feature, self.expr).signature()
+        if not self.signature:
+            self.signature = expect
+        elif self.signature != expect:
+            raise ProfileError(
+                f"model fit signature mismatch: stored {self.signature!r} "
+                f"but output feature + expression hash to {expect!r} — the "
+                f"profile was edited or corrupted")
+
+    @classmethod
+    def from_fit(cls, model: Model, fit: FitResult) -> "ModelFit":
+        return cls(output_feature=model.output_feature, expr=model.expr,
+                   fit=fit, signature=model.signature())
+
+    @property
+    def params(self) -> Dict[str, float]:
+        return self.fit.params
+
+    def model(self) -> Model:
+        return Model(self.output_feature, self.expr)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"output_feature": self.output_feature, "expr": self.expr,
+                "signature": self.signature, **self.fit.to_dict()}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ModelFit":
+        return cls(output_feature=str(d["output_feature"]),
+                   expr=str(d["expr"]),
+                   fit=FitResult.from_dict(d),
+                   signature=str(d.get("signature", "")))
+
+
+@dataclass
+class MachineProfile:
+    """Everything a later session needs to predict on this machine without
+    re-measuring: fingerprint, fitted models, and measurement provenance."""
+
+    fingerprint: DeviceFingerprint
+    fits: Dict[str, ModelFit] = field(default_factory=dict)
+    trials: int = 0
+    kernel_names: List[str] = field(default_factory=list)
+    schema_version: int = PROFILE_SCHEMA_VERSION
+
+    def fit_for(self, model: Model) -> ModelFit:
+        """The stored fit matching ``model`` (by content signature)."""
+        sig = model.signature()
+        for mf in self.fits.values():
+            if mf.signature == sig:
+                return mf
+        have = {name: mf.output_feature for name, mf in self.fits.items()}
+        raise ProfileError(
+            f"profile has no fit for model {model.output_feature!r} "
+            f"(signature {sig}); stored fits: {have}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema_version": self.schema_version,
+            "fingerprint": self.fingerprint.to_dict(),
+            "trials": self.trials,
+            "kernel_names": list(self.kernel_names),
+            "fits": {name: mf.to_dict() for name, mf in self.fits.items()},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "MachineProfile":
+        version = d.get("schema_version")
+        if version != PROFILE_SCHEMA_VERSION:
+            raise ProfileError(
+                f"unsupported profile schema version {version!r} "
+                f"(this build reads version {PROFILE_SCHEMA_VERSION}); "
+                f"re-run `python -m repro.calibrate` to regenerate")
+        try:
+            return cls(
+                fingerprint=DeviceFingerprint.from_dict(d["fingerprint"]),
+                fits={str(name): ModelFit.from_dict(mf)
+                      for name, mf in dict(d["fits"]).items()},
+                trials=int(d.get("trials", 0)),
+                kernel_names=[str(n) for n in d.get("kernel_names", [])],
+                schema_version=int(version),
+            )
+        except (KeyError, TypeError, ValueError) as e:
+            raise ProfileError(f"malformed profile: {e!r}") from e
+
+
+def save_profile(profile: MachineProfile, path) -> Path:
+    """Atomically write ``profile`` to ``path`` (JSON, deterministic)."""
+    path = Path(path)
+    atomic_write_json(path, profile.to_dict())
+    return path
+
+
+def load_profile(path, *,
+                 expected_fingerprint: Optional[DeviceFingerprint] = None
+                 ) -> MachineProfile:
+    """Load and validate a profile; raise :class:`ProfileError` if the file
+    is corrupt, from another schema, or (when ``expected_fingerprint`` is
+    given) calibrated on different hardware."""
+    path = Path(path)
+    try:
+        raw = path.read_text()
+    except OSError as e:
+        raise ProfileError(f"cannot read profile {path}: {e}") from e
+    try:
+        payload = json.loads(raw)
+    except ValueError as e:
+        raise ProfileError(
+            f"profile {path} is not valid JSON ({e}) — the file is "
+            f"corrupt or truncated") from e
+    if not isinstance(payload, dict):
+        raise ProfileError(f"profile {path} is not a JSON object")
+    profile = MachineProfile.from_dict(payload)
+    if expected_fingerprint is not None \
+            and profile.fingerprint != expected_fingerprint:
+        raise ProfileError(
+            f"profile {path} was calibrated on "
+            f"{profile.fingerprint.id!r} but this machine is "
+            f"{expected_fingerprint.id!r}; recalibrate with "
+            f"`python -m repro.calibrate`")
+    return profile

@@ -82,6 +82,39 @@ def test_while_inside_scan_multiplies_by_scan_length_only():
     assert c["f_sync_loop_steps"] == 6 + 6
 
 
+def test_while_cond_jaxpr_counted_once():
+    """The while predicate's arithmetic must be charged (once per visit,
+    alongside the body) — it was previously dropped entirely."""
+
+    def f(x):
+        def cond(c):
+            return jnp.sum(c) < 10.0       # reduce_sum → 8 float32 adds
+
+        def body(c):
+            return jnp.tanh(c)             # 8 transcendentals
+
+        return jax.lax.while_loop(cond, body, x)
+
+    c = count_fn(f, jnp.ones((8,)))
+    assert c["f_op_float32_transc"] == 8   # body, once
+    assert c["f_op_float32_add"] == 8      # predicate, once
+    assert c["f_sync_loop_steps"] == 1
+
+
+def test_while_cond_inside_scan_charged_per_scan_step():
+    def f(x):
+        def body(c, _):
+            c = jax.lax.while_loop(
+                lambda v: jnp.sum(v) < 10.0, lambda v: jnp.tanh(v), c)
+            return c, None
+
+        y, _ = jax.lax.scan(body, x, None, length=6)
+        return y
+
+    c = count_fn(f, jnp.ones((8,)))
+    assert c["f_op_float32_add"] == 6 * 8  # predicate ×6 scan steps
+
+
 def test_fori_loop_counts_as_scan():
     """fori_loop with static bounds lowers to scan: trip count must be
     applied, not the single-visit while accounting."""

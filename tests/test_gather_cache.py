@@ -1,0 +1,197 @@
+"""One-pass gather semantics + incremental measurement cache + CLI.
+
+Regression battery for the calibration-pipeline sweep: each kernel is timed
+exactly once per gather regardless of wall-time column count, warm cache
+runs perform zero timings, and the cache invalidates on fingerprint/trials
+changes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.uipick import CountingTimer, MeasurementKernel, \
+    gather_feature_table
+from repro.profiles import DeviceFingerprint, MeasurementCache
+from repro.profiles.cli import main as calibrate_main
+
+FP = DeviceFingerprint(platform="cpu", device_kind="Test CPU", n_devices=1)
+OTHER_FP = DeviceFingerprint(platform="cpu", device_kind="Other CPU",
+                             n_devices=2)
+
+
+def _tiny_kernels(n=3):
+    kernels = []
+    for i in range(n):
+        size = 8 * (i + 1)
+
+        def make_args(s=size):
+            return (jnp.ones((s,), jnp.float32),)
+
+        kernels.append(MeasurementKernel(
+            name=f"tiny_{size}", fn=lambda x: x * 2.0 + 1.0,
+            make_args=make_args, tags={"n": size}, sizes={"n": size}))
+    return kernels
+
+
+def _fake_timer():
+    return CountingTimer(lambda k, trials: 0.125)
+
+
+FEATURES = ["f_wall_time_cpu_host", "f_op_float32_mul", "f_op_float32_add"]
+
+
+def test_multiple_wall_time_columns_time_each_kernel_once():
+    """k wall-time columns must NOT mean k timing passes (the original
+    per-column loop re-ran the full measurement per column)."""
+    kernels = _tiny_kernels(3)
+    timer = _fake_timer()
+    features = ["f_wall_time_a", "f_wall_time_b", "f_wall_time_c",
+                "f_op_float32_mul"]
+    table = gather_feature_table(features, kernels, trials=4, timer=timer)
+    assert timer.calls == len(kernels)          # exactly one pass per kernel
+    vals = table.values
+    np.testing.assert_array_equal(vals[:, 0], vals[:, 1])
+    np.testing.assert_array_equal(vals[:, 0], vals[:, 2])
+    assert list(vals[:, 3]) == [8.0, 16.0, 24.0]
+
+
+def test_counts_only_gather_never_times():
+    kernels = _tiny_kernels(2)
+    timer = _fake_timer()
+    gather_feature_table(["f_op_float32_mul"], kernels, timer=timer)
+    assert timer.calls == 0
+
+
+def test_warm_cache_performs_zero_timings(tmp_path):
+    kernels = _tiny_kernels(3)
+    cache = MeasurementCache(tmp_path, FP)
+    cold = _fake_timer()
+    t1 = gather_feature_table(FEATURES, kernels, trials=4, timer=cold,
+                              cache=cache)
+    assert cold.calls == 3 and cache.misses == 3 and cache.hits == 0
+
+    warm_cache = MeasurementCache(tmp_path, FP)
+    warm = _fake_timer()
+    # fresh kernel objects: nothing memoized in-process
+    t2 = gather_feature_table(FEATURES, _tiny_kernels(3), trials=4,
+                              timer=warm, cache=warm_cache)
+    assert warm.calls == 0 and warm_cache.hits == 3
+    np.testing.assert_array_equal(t1.values, t2.values)
+    assert t1.feature_ids == t2.feature_ids
+
+
+def test_cache_incremental_only_new_kernels_timed(tmp_path):
+    cache = MeasurementCache(tmp_path, FP)
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                         timer=_fake_timer(), cache=cache)
+    timer = _fake_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(4), trials=4, timer=timer,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer.calls == 2                     # only the two new kernels
+
+
+def test_cache_invalidates_on_trials_change(tmp_path):
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                         timer=_fake_timer(),
+                         cache=MeasurementCache(tmp_path, FP))
+    timer = _fake_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=8, timer=timer,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer.calls == 2
+
+
+def test_cache_invalidates_on_fingerprint_change(tmp_path):
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                         timer=_fake_timer(),
+                         cache=MeasurementCache(tmp_path, FP))
+    timer = _fake_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4, timer=timer,
+                         cache=MeasurementCache(tmp_path, OTHER_FP))
+    assert timer.calls == 2
+
+
+def test_corrupt_cache_entry_is_a_miss_and_heals(tmp_path):
+    cache = MeasurementCache(tmp_path, FP)
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                         timer=_fake_timer(), cache=cache)
+    victim = sorted(tmp_path.glob("*.json"))[0]
+    victim.write_text("{ torn write")
+    timer = _fake_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4, timer=timer,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer.calls == 1                     # only the corrupted entry
+    # healed: fully warm again
+    timer2 = _fake_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4, timer=timer2,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer2.calls == 0
+
+
+@pytest.mark.parametrize("junk", ["null", "[]", "42",
+                                  '{"key": {}, "counts": "nope"}'])
+def test_valid_json_but_wrong_shape_entry_is_a_miss(tmp_path, junk):
+    """Entries that parse as JSON but aren't well-formed cache objects must
+    read as misses, not crash the gather."""
+    cache = MeasurementCache(tmp_path, FP)
+    gather_feature_table(FEATURES, _tiny_kernels(1), trials=4,
+                         timer=_fake_timer(), cache=cache)
+    (entry,) = tmp_path.glob("*.json")
+    entry.write_text(junk)
+    timer = _fake_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(1), trials=4, timer=timer,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer.calls == 1
+
+
+def test_counts_only_entry_backfills_wall_time(tmp_path):
+    """An entry cached by a counts-only gather reuses its counts and times
+    once when a wall-time column is later requested."""
+    gather_feature_table(["f_op_float32_mul"], _tiny_kernels(2),
+                         timer=_fake_timer(),
+                         cache=MeasurementCache(tmp_path, FP))
+    timer = _fake_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=20, timer=timer,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer.calls == 2
+    timer2 = _fake_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=20, timer=timer2,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer2.calls == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI: cold run measures + writes profile; warm run is zero-timing and
+# byte-identical (the acceptance property, in-process)
+# ---------------------------------------------------------------------------
+
+
+CLI_ARGS = ["--tags", "empty_kernel", "nelements:16,1024",
+            "--match", "intersect",
+            "--expr", "p_launch * f_sync_launch_kernel",
+            "--trials", "2"]
+
+
+def test_cli_cold_then_warm_zero_timings_identical_profile(tmp_path):
+    cache_dir = str(tmp_path / "cache")
+    p1, p2 = tmp_path / "prof1.json", tmp_path / "prof2.json"
+    rc = calibrate_main(CLI_ARGS + ["--cache-dir", cache_dir,
+                                    "--out", str(p1)])
+    assert rc == 0
+    rc = calibrate_main(CLI_ARGS + ["--cache-dir", cache_dir,
+                                    "--out", str(p2),
+                                    "--expect-zero-timings"])
+    assert rc == 0
+    assert p1.read_text() == p2.read_text()
+
+
+def test_cli_expect_zero_timings_fails_on_cold_cache(tmp_path):
+    rc = calibrate_main(CLI_ARGS + ["--cache-dir", str(tmp_path / "c"),
+                                    "--out", str(tmp_path / "p.json"),
+                                    "--expect-zero-timings"])
+    assert rc == 1
+
+
+def test_cli_no_matching_kernels_is_an_error(tmp_path):
+    rc = calibrate_main(["--tags", "no_such_generator",
+                         "--match", "identical",
+                         "--out", str(tmp_path / "p.json")])
+    assert rc == 2

@@ -87,6 +87,33 @@ def test_parametric_counts_match_direct():
             assert at[k] == pytest.approx(v), (k, n)
 
 
+def test_parametric_counts_probe_full_grid_before_freezing_features():
+    """A feature absent at the base probe size but present at larger grid
+    sizes (a scan that vanishes when n == tile) must still get a
+    polynomial — the old code froze the feature set after one probe and
+    silently evaluated such features to 0."""
+
+    def fn(x):
+        n = x.shape[0]
+        if n <= 16:                 # base size: no scan at all
+            return x
+
+        def body(c, _):
+            return jnp.tanh(c), None
+
+        c, _ = jax.lax.scan(body, x, None, length=n // 16 - 1)
+        return c
+
+    sym = parametric_counts(lambda n: (jnp.zeros((n,)),), fn, {"n": 2})
+    assert "f_op_float32_transc" in sym.counts
+    # transc count is n·(n/16 − 1) = n²/16 − n on the probed lattice
+    assert sym.at(n=64)["f_op_float32_transc"] == 64 * 3
+    assert sym.at(n=96)["f_op_float32_transc"] == 96 * 5
+    assert sym.at(n=16)["f_op_float32_transc"] == 0
+    # the scan's loop-step bookkeeping reconstructs too
+    assert sym.at(n=64)["f_sync_loop_steps"] == 3
+
+
 @hypothesis.given(st.lists(st.integers(-5, 5), min_size=1, max_size=4),
                   st.integers(1, 20), st.integers(1, 20))
 @hypothesis.settings(max_examples=30, deadline=None)

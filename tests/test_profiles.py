@@ -1,0 +1,133 @@
+"""Machine-profile persistence: save → load round trip, strict validation
+(corrupt files, schema drift, foreign fingerprints), atomic writes."""
+import json
+
+import pytest
+
+from repro.core.calibrate import fit_model
+from repro.core.model import Model
+from repro.profiles import (
+    PROFILE_SCHEMA_VERSION,
+    DeviceFingerprint,
+    MachineProfile,
+    ModelFit,
+    ProfileError,
+    load_profile,
+    save_profile,
+)
+
+FP = DeviceFingerprint(platform="cpu", device_kind="Test CPU", n_devices=1)
+
+
+def _fitted_model():
+    model = Model("f_wall_time_x", "p_a * f_x + p_b * f_y")
+    rows = [{"f_x": float(n ** 3), "f_y": float(n ** 2),
+             "f_wall_time_x": 3e-9 * n ** 3 + 7e-10 * n ** 2}
+            for n in (64, 96, 128, 192)]
+    return model, fit_model(model, rows, nonneg=True)
+
+
+def _profile(model, fit):
+    return MachineProfile(fingerprint=FP,
+                          fits={"base": ModelFit.from_fit(model, fit)},
+                          trials=8, kernel_names=["k0", "k1"])
+
+
+def test_roundtrip_reproduces_parameters_exactly(tmp_path):
+    model, fit = _fitted_model()
+    path = save_profile(_profile(model, fit), tmp_path / "prof.json")
+    loaded = load_profile(path, expected_fingerprint=FP)
+    mf = loaded.fit_for(model)
+    # bit-exact float round trip through JSON
+    assert mf.params == fit.params
+    assert mf.fit.residual_norm == fit.residual_norm
+    assert mf.fit.iterations == fit.iterations
+    assert mf.fit.converged == fit.converged
+    feats = {"f_x": 1e6, "f_y": 1e4}
+    assert float(model.evaluate(mf.params, feats)) \
+        == float(model.evaluate(fit.params, feats))
+    assert loaded.trials == 8
+    assert loaded.kernel_names == ["k0", "k1"]
+
+
+def test_save_is_deterministic_and_atomic(tmp_path):
+    model, fit = _fitted_model()
+    p1 = save_profile(_profile(model, fit), tmp_path / "a.json")
+    p2 = save_profile(_profile(model, fit), tmp_path / "b.json")
+    assert p1.read_text() == p2.read_text()
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_fit_for_unknown_model_names_available_fits(tmp_path):
+    model, fit = _fitted_model()
+    path = save_profile(_profile(model, fit), tmp_path / "prof.json")
+    other = Model("f_wall_time_x", "p_c * f_z")
+    with pytest.raises(ProfileError, match="no fit for model"):
+        load_profile(path).fit_for(other)
+
+
+def test_corrupt_profile_fails_with_clear_error(tmp_path):
+    path = tmp_path / "prof.json"
+    path.write_text("{ this is not json")
+    with pytest.raises(ProfileError, match="not valid JSON"):
+        load_profile(path)
+    path.write_text("[1, 2, 3]")
+    with pytest.raises(ProfileError, match="not a JSON object"):
+        load_profile(path)
+
+
+def test_missing_file_raises_profile_error(tmp_path):
+    with pytest.raises(ProfileError, match="cannot read profile"):
+        load_profile(tmp_path / "nope.json")
+
+
+def test_old_schema_rejected(tmp_path):
+    model, fit = _fitted_model()
+    payload = _profile(model, fit).to_dict()
+    payload["schema_version"] = PROFILE_SCHEMA_VERSION - 1
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ProfileError, match="schema version"):
+        load_profile(path)
+
+
+def test_malformed_fields_rejected(tmp_path):
+    model, fit = _fitted_model()
+    payload = _profile(model, fit).to_dict()
+    del payload["fingerprint"]
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ProfileError, match="malformed profile"):
+        load_profile(path)
+
+
+def test_edited_expression_breaks_signature(tmp_path):
+    """Tampering with the stored expression (without refreshing the
+    signature) must not silently produce a wrong model."""
+    model, fit = _fitted_model()
+    payload = _profile(model, fit).to_dict()
+    payload["fits"]["base"]["expr"] = "p_a * f_x"
+    path = tmp_path / "tampered.json"
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ProfileError, match="signature mismatch"):
+        load_profile(path)
+
+
+def test_foreign_fingerprint_rejected(tmp_path):
+    model, fit = _fitted_model()
+    path = save_profile(_profile(model, fit), tmp_path / "prof.json")
+    other = DeviceFingerprint(platform="tpu", device_kind="TPU v4",
+                              n_devices=8)
+    with pytest.raises(ProfileError, match="this machine"):
+        load_profile(path, expected_fingerprint=other)
+    # without the expectation the load succeeds (shipping profiles around
+    # for inspection is legitimate)
+    assert load_profile(path).fingerprint == FP
+
+
+def test_fingerprint_id_is_filename_safe():
+    fp = DeviceFingerprint(platform="gpu",
+                           device_kind="NVIDIA A100-SXM4/40GB",
+                           n_devices=4)
+    assert "/" not in fp.id and " " not in fp.id
+    assert fp.id.startswith("gpu_")

@@ -83,6 +83,28 @@ def test_kernel_counts_and_timing():
     assert 0 < t < 5.0
 
 
+def test_kernel_time_warmup_zero_does_not_raise():
+    """warmup=0 used to hit UnboundLocalError on block_until_ready(out)."""
+    (knl,) = COLL.generate_kernels(["empty_kernel", "nelements:16"],
+                                   generator_match_cond=MatchCondition.INTERSECT)
+    t = knl.time(trials=2, warmup=0)
+    assert t > 0
+
+
+def test_kernel_jit_compiled_once_across_timings():
+    """time() must reuse one cached jitted callable instead of re-jitting
+    (and re-tracing) on every call."""
+    (knl,) = COLL.generate_kernels(["empty_kernel", "nelements:16"],
+                                   generator_match_cond=MatchCondition.INTERSECT)
+    assert knl._jitted is None
+    knl.time(trials=1, warmup=1)
+    jf = knl._jitted
+    assert jf is not None
+    knl.time(trials=1, warmup=0)
+    assert knl._jitted is jf
+    assert knl.jitted() is jf
+
+
 # ---------------------------------------------------------------------------
 # work removal
 # ---------------------------------------------------------------------------
