@@ -14,6 +14,8 @@ Benches (one per paper table/figure):
   table3  Table 3    — calibrated parameter values / implied rates
   calibration — batched vs reference fit_model on a 64-row table
   roofline deliverable g — three-term roofline per (arch × shape)
+  study   §8 cross-machine — synthetic fleet study: multi-fit engine
+          cold vs solver-cache-warm, closed-loop recovery error
 """
 import sys
 import time
@@ -23,9 +25,11 @@ def main() -> None:
     from benchmarks import paper_figures as pf
     from benchmarks.calibration_bench import calibration_rows
     from benchmarks.roofline_bench import roofline_rows
+    from benchmarks.study_bench import study_rows
 
     benches = {
         "calibration": calibration_rows,
+        "study": study_rows,
         "fig1": pf.fig1_matmul_simple,
         "fig2": pf.fig2_madd_component,
         "fig5": pf.fig5_overlap,

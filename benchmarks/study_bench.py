@@ -1,0 +1,57 @@
+"""Cross-machine study benchmark: the one-battery multi-fit engine.
+
+Times a full synthetic three-device study (gather + zoo multi-fit +
+holdout evaluation) cold, then repeats it to expose the shared
+signature-keyed solver cache — the second device fleet pays ZERO solver
+re-tracing, which is the amortization that makes per-machine zoo
+recalibration cheap.  Rows follow the suite convention
+``name,us_per_call,derived``; ``derived`` carries the cold/warm speedup
+and the closed-loop recovery error (the accuracy claim, as a number).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.studies import STUDY_TAGS, compare_profiles, run_study
+from repro.testing.synthdev import default_fleet
+
+NOISE = 0.02
+
+
+def _one_fleet_study(trials: int):
+    profiles = []
+    for device in default_fleet(noise=NOISE):
+        profiles.append(run_study(fingerprint=device.fingerprint,
+                                  timer=device.timer, tags=STUDY_TAGS,
+                                  trials=trials))
+    return profiles
+
+
+def study_rows() -> List[str]:
+    t0 = time.perf_counter()
+    profiles = _one_fleet_study(trials=3)
+    cold = time.perf_counter() - t0
+
+    # second fleet pass: same model signatures → compiled solvers reused
+    t0 = time.perf_counter()
+    _one_fleet_study(trials=4)
+    warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    report = compare_profiles(profiles)
+    compare_s = time.perf_counter() - t0
+
+    rows = [
+        f"study.fleet_cold_3dev,{cold * 1e6:.0f},",
+        f"study.fleet_warm_3dev,{warm * 1e6:.0f},{cold / warm:.2f}x",
+        f"study.compare_3dev,{compare_s * 1e6:.0f},",
+    ]
+    for device, profile in zip(default_fleet(noise=NOISE), profiles):
+        fit = profile.fits[device.truth.name]
+        worst = max(abs(fit.params[p] - device.p_true[p]) / device.p_true[p]
+                    for p in device.truth.recoverable)
+        gmre = report.summary[device.fingerprint.id][device.truth.name]
+        rows.append(f"study.recovery_{device.name},"
+                    f"{worst * 100:.4f},{gmre * 100:.2f}")
+    return rows

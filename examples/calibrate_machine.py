@@ -26,7 +26,25 @@ CLI reference (``python -m repro.calibrate --help``):
   --name NAME           fit name inside the profile (default "base")
   --trials N            timing trials per measurement kernel
   --smoke               tiny battery + 2-parameter model (CI-sized)
+  --zoo                 fit the whole model zoo (linear → nonlinear) over
+                        one battery with a held-out split — the
+                        cross-machine study artifact (repro.studies)
+  --holdout-fraction F  held-out fraction of the battery (with --zoo)
+  --synthetic DEV       calibrate a synthetic ground-truth device
+                        (apex/bulk/citra) instead of real hardware
+  --synthetic-noise X   relative timing noise of the synthetic device
   --expect-zero-timings exit 1 unless the cache was fully warm
+
+Study subcommands (see examples/cross_machine_study.py):
+
+  compare P1 P2 [...] --report r.md --json r.json
+                        per-model × per-variant held-out relative-error
+                        report across machines
+  merge P1 P2 [...] --out M [--fleet]
+                        union same-machine fits (conflicts error); with
+                        --fleet, bundle distinct machines
+  gc --cache-dir DIR [--max-age S] [--keep-foreign]
+                        evict corrupt/foreign/stale cache entries
 
 Consuming a profile afterwards:
 

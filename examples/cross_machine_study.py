@@ -1,0 +1,51 @@
+"""Cross-machine study walkthrough (paper §8): one battery, many fits,
+comparable accuracy tables across machines.
+
+The study subsystem (``repro.studies``) turns the paper's evaluation into
+artifacts:
+
+1. On each machine, ``run_study`` gathers ONE timing battery, splits it
+   deterministically into train/held-out kernel variants, fits every
+   model-zoo form (linear flop-only → flop+membw → nonlinear overlap) on
+   the train rows, and saves fits + held-out measurements as a profile.
+2. ``compare_profiles`` renders per-model × per-variant held-out relative
+   error for all machines — no hardware access needed at compare time.
+
+This example runs the whole loop on the synthetic ground-truth fleet
+(three fake machines with KNOWN parameters), so it works anywhere, shows
+closed-loop parameter recovery, and demonstrates the exact CLI the real
+workflow uses:
+
+    # per machine (real hardware: drop --synthetic)
+    python -m repro.calibrate --zoo --out apex.json --cache-dir mc
+    # anywhere, later
+    python -m repro.calibrate compare apex.json bulk.json --report r.md
+    python -m repro.calibrate merge apex.json bulk.json --fleet \
+        --out fleet.json
+
+Run:  PYTHONPATH=src python examples/cross_machine_study.py
+"""
+from repro.studies import STUDY_TAGS, compare_profiles, run_study
+from repro.testing.synthdev import default_fleet
+
+NOISE = 0.02    # relative timing noise of the fake machines
+
+profiles = []
+for device in default_fleet(noise=NOISE):
+    profile = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                        tags=STUDY_TAGS, trials=3)
+    profiles.append(profile)
+    print(f"== {device.fingerprint.id}")
+    truth = device.truth
+    fit = profile.fits[truth.name]
+    for p in truth.recoverable:
+        rel = abs(fit.params[p] - device.p_true[p]) / device.p_true[p]
+        print(f"   {p}: true {device.p_true[p]:.3e}  "
+              f"fitted {fit.params[p]:.3e}  (rel err {rel * 100:.2f}%)")
+
+report = compare_profiles(profiles)
+print()
+print(report.to_markdown())
+print("The nonlinear overlap model is no worse than either linear form on")
+print("every machine (up to the timing-noise floor) — the paper's")
+print("accuracy-vs-scope ordering, asserted in tests/test_synthdev_study.py.")

@@ -176,19 +176,42 @@ def levenberg_marquardt(
 # ---------------------------------------------------------------------------
 
 
+# Process-wide solver cache keyed by model *content signature* + solver
+# options.  Model instances cache their compiled solver locally, but a
+# multi-model study recreates Model objects (zoo registry, profile loads)
+# — identical (output feature, expr) must not pay re-tracing, so the trace
+# is shared across instances here.  Sound because the signature pins the
+# exact expression, hence identical param/feature orderings and identical
+# computations.  FIFO-bounded: each compiled closure pins a Model for as
+# long as it is cached, and a long-lived process sweeping many distinct
+# expressions must not grow without bound.
+_SHARED_SOLVER_CACHE: Dict[tuple, Callable] = {}
+_SHARED_SOLVER_CACHE_MAX = 64
+
+
 def _batch_solver(model: Model, *, nonneg: bool, max_iters: int, lam0: float,
                   lam_up: float, lam_down: float, tol: float) -> Callable:
     """Compiled ``(F, target, starts) -> best (p, cost, it, conv)`` solver;
-    cached on the model so repeated calibrations re-use the trace (jit
-    itself re-specializes on new table shapes)."""
+    cached on the model AND in the process-wide signature-keyed cache so
+    repeated calibrations — including of re-created equal models — re-use
+    the trace (jit itself re-specializes on new table shapes)."""
     key = ("lm_batch", nonneg, max_iters, lam0, lam_up, lam_down, tol)
     solver = model._solver_cache.get(key)
     if solver is None:
+        solver = _SHARED_SOLVER_CACHE.get((model.signature(),) + key)
+        if solver is not None:
+            model._solver_cache[key] = solver
+    if solver is None:
 
         @jax.jit
-        def solver(F, target, starts):
-            def resid(p):
-                return target - model.batched_eval(p, F)
+        def solver(F, target, starts, scale):
+            """``starts`` are in scale-normalized units: the model sees
+            ``p_norm · scale``.  Normalizing by the nominal start makes the
+            LM system well-conditioned when parameters span many orders of
+            magnitude (rates ~1e-12 next to smoothing edges ~1e2 — float32
+            cannot solve that system raw)."""
+            def resid(p_norm):
+                return target - model.batched_eval(p_norm * scale, F)
 
             def one(s):
                 return _lm_core(resid, s, max_iters=max_iters, lam0=lam0,
@@ -197,9 +220,12 @@ def _batch_solver(model: Model, *, nonneg: bool, max_iters: int, lam0: float,
 
             p, cost, it, conv = jax.vmap(one)(starts)
             best = jnp.argmin(cost)
-            return p[best], cost[best], it[best], conv[best]
+            return p[best] * scale, cost[best], it[best], conv[best]
 
         model._solver_cache[key] = solver
+        while len(_SHARED_SOLVER_CACHE) >= _SHARED_SOLVER_CACHE_MAX:
+            _SHARED_SOLVER_CACHE.pop(next(iter(_SHARED_SOLVER_CACHE)))
+        _SHARED_SOLVER_CACHE[(model.signature(),) + key] = solver
     return solver
 
 
@@ -252,12 +278,16 @@ def fit_model(
     if p0:
         p_init = jnp.asarray([p0.get(n, 1e-9) for n in names], dt)
     starts = _multi_starts(p_init, names, max(seeds, 1)).astype(dt)
+    # LM runs in units where the nominal start is O(1) per parameter —
+    # positions with a zero start keep raw units (scale 1)
+    scale = jnp.where(starts[0] > 0, starts[0], 1.0).astype(dt)
+    starts = starts / scale
 
     solver = _batch_solver(model, nonneg=nonneg, max_iters=max_iters,
                            lam0=lam0, lam_up=lam_up, lam_down=lam_down,
                            tol=tol)
     p, cost, it, conv = solver(jnp.asarray(F_np, dt),
-                               jnp.asarray(target_np, dt), starts)
+                               jnp.asarray(target_np, dt), starts, scale)
     p = np.asarray(p)
     return FitResult(
         params={n: float(v) for n, v in zip(names, p)},
@@ -265,8 +295,102 @@ def fit_model(
         iterations=int(it), converged=bool(conv))
 
 
+def fit_models(
+    models: Mapping[str, Model],
+    feature_table: FeatureTableLike,
+    *,
+    scale_by_output: bool = True,
+    nonneg: Optional[Mapping[str, bool]] = None,
+    seeds: int = 3,
+    warm_start: bool = True,
+    **solver_opts,
+) -> Dict[str, FitResult]:
+    """Shared-table multi-fit: calibrate several named models over ONE
+    gathered feature table (the paper's one-battery-many-fits workflow —
+    every model form in a cross-machine study sees identical measurements,
+    so accuracy differences are attributable to model scope, not noise).
+
+    With ``warm_start`` (default), fits chain in ``models`` order: each
+    model's nominal start is seeded with the parameter values already
+    recovered by earlier (narrower-scope) fits for the names they share.
+    This is what makes nonlinear forms practical — a linear flop+membw fit
+    lands near the true rates via plain least squares, and the overlap
+    model only has to refine them, instead of hoping a random multi-start
+    finds a basin that spans six orders of magnitude in parameter scale.
+    Order ``models`` from narrowest to broadest scope (the zoo's order).
+
+    The table is densified once; each model's compiled solver comes from
+    the signature-keyed solver cache, so a study re-run (or the same zoo
+    fitted on the next machine) pays zero re-tracing.  ``nonneg`` maps
+    model name → nonnegativity constraint (default True, the paper's
+    cost-explanatory setting).
+    """
+    table = as_feature_table(feature_table)
+    nonneg = dict(nonneg or {})
+    fits: Dict[str, FitResult] = {}
+    ladder: Dict[str, float] = {}
+    for name, model in models.items():
+        p0 = {n: ladder[n] for n in model.param_names if n in ladder} \
+            if warm_start and ladder else None
+        fit = fit_model(model, table, scale_by_output=scale_by_output,
+                        nonneg=nonneg.get(name, True), seeds=seeds,
+                        p0=p0, **solver_opts)
+        fits[name] = fit
+        # carry only positive estimates forward: a rate clamped to 0 by a
+        # narrow model is a worse start (and a degenerate LM scale) than an
+        # earlier model's coarse positive estimate
+        ladder.update({k: v for k, v in fit.params.items() if v > 0})
+    return fits
+
+
+def relative_errors(model: Model, params: Mapping[str, float],
+                    table: FeatureTableLike) -> Dict[str, float]:
+    """Per-row |pred − meas| / meas of ``model`` under ``params`` against
+    the table's measured output column — the cell values of the paper's
+    per-variant accuracy tables (§8, Tables 3–6).
+
+    Every feature the model reads must actually be a column of the table:
+    a missing feature would silently evaluate as 0 and the resulting
+    'accuracy' numbers would be fabrications, so it is an error instead
+    (e.g. scoring a legacy fit against a study holdout that never
+    gathered its features).
+    """
+    ft = as_feature_table(table)
+    missing = [n for n in (model.output_feature, *model.feature_names)
+               if n not in ft.feature_ids]
+    if missing:
+        raise ValueError(
+            f"feature table lacks columns {missing} required by the "
+            f"{model.output_feature!r} model; accuracy against it would "
+            f"silently read them as 0 — re-gather with these features")
+    meas = ft.column(model.output_feature)
+    bad = np.flatnonzero(~(np.abs(meas) > 0))
+    if bad.size:
+        raise ValueError(
+            f"measured output {model.output_feature!r} is zero for row "
+            f"{ft.row_names[int(bad[0])]!r}; relative error is undefined")
+    dt = _param_dtype()
+    F = np.stack([ft.column(n) for n in model.feature_names], axis=1) \
+        if model.feature_names else np.zeros((len(ft), 0))
+    p_vec = jnp.asarray([params[n] for n in model.param_names], dt)
+    pred = np.asarray(model.batched_eval(p_vec, jnp.asarray(F, dt)),
+                      np.float64)
+    rel = np.abs(pred - meas) / np.abs(meas)
+    return {name: float(r) for name, r in zip(ft.row_names, rel)}
+
+
+def _gmre(rel: Sequence[float]) -> float:
+    """Geometric mean of relative errors, floored at 1e-12 (one place)."""
+    clamped = [max(float(r), 1e-12) for r in rel]
+    return float(np.exp(np.mean(np.log(clamped))))
+
+
 def geometric_mean_relative_error(pred: Sequence[float],
                                   meas: Sequence[float]) -> float:
     """Paper's headline accuracy metric (Fleming & Wallace 1986)."""
-    rel = [max(abs(p - m) / abs(m), 1e-12) for p, m in zip(pred, meas)]
-    return float(np.exp(np.mean(np.log(rel))))
+    return _gmre([abs(p - m) / abs(m) for p, m in zip(pred, meas)])
+
+
+def gmre_of(rel_errors: Mapping[str, float]) -> float:
+    """Geometric-mean summary of a per-row relative-error map."""
+    return _gmre(list(rel_errors.values()))

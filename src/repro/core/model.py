@@ -91,6 +91,10 @@ class FeatureTable:
     feature_ids: List[str]
     values: np.ndarray                      # [n_rows, n_features] float64
     row_names: List[str] = field(default_factory=list)
+    # per-row measurement-noise metadata keyed by row name, e.g.
+    # {"median": ..., "std": ..., "min": ...} — populated by
+    # gather_feature_table when the timer reports spread, empty otherwise
+    row_noise: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     def __post_init__(self):
         self.values = np.asarray(self.values, np.float64)
@@ -132,6 +136,47 @@ class FeatureTable:
                 vals[i, j] = float(r.get(f, 0.0))
         names = [str(r.get("_kernel", f"row{i}")) for i, r in enumerate(rows)]
         return cls(ids, vals, names)
+
+    def select(self, indices: Sequence[int]) -> "FeatureTable":
+        """Sub-table of the given rows (noise metadata follows its rows)."""
+        idx = list(indices)
+        names = [self.row_names[i] for i in idx]
+        return FeatureTable(
+            list(self.feature_ids), self.values[idx, :], names,
+            {n: dict(self.row_noise[n]) for n in names
+             if n in self.row_noise})
+
+    def noise_summary(self) -> Dict[str, float]:
+        """Relative wall-clock noise (std / median) summary over rows that
+        carry spread metadata; empty when none do.  The single source of
+        the fit-diagnostic noise line (CLI) and report noise section."""
+        rel = [d["std"] / d["median"] for d in self.row_noise.values()
+               if d.get("std") is not None and d.get("median", 0) > 0]
+        if not rel:
+            return {}
+        return {"max_rel_std": float(np.max(rel)),
+                "median_rel_std": float(np.median(rel)),
+                "rows": float(len(rel))}
+
+    # -- JSON round trip (profile holdout persistence) -----------------------
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "feature_ids": list(self.feature_ids),
+            "values": [[float(v) for v in row] for row in self.values],
+            "row_names": list(self.row_names),
+            "row_noise": {n: {k: float(v) for k, v in d.items()}
+                          for n, d in sorted(self.row_noise.items())},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "FeatureTable":
+        return cls(
+            [str(f) for f in d["feature_ids"]],
+            np.asarray(d["values"], np.float64).reshape(
+                len(d["row_names"]), len(d["feature_ids"])),
+            [str(n) for n in d["row_names"]],
+            {str(n): {str(k): float(v) for k, v in dict(nd).items()}
+             for n, nd in dict(d.get("row_noise", {})).items()})
 
 
 FeatureTableLike = Union[FeatureTable, Sequence[Mapping[str, float]]]

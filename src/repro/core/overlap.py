@@ -28,7 +28,12 @@ def overlap2(c_a, c_b, p_edge):
     calibration scaling cancels exactly — while preserving the p_edge → ∞
     max() limit.  ``overlap2_raw`` keeps the paper's literal form.
     """
-    tot = jnp.abs(c_a) + jnp.abs(c_b) + 1e-30
+    # the guard term must survive SQUARING in float32 autodiff: the
+    # quotient rule divides by tot², and 1e-30² underflows to 0 in f32,
+    # which turns the Jacobian into NaN on rows where both costs are 0
+    # (e.g. launch-overhead kernels in a calibration battery) and stalls
+    # LM dead at its starting point
+    tot = jnp.abs(c_a) + jnp.abs(c_b) + 1e-15
     return c_a * smooth_step((c_a - c_b) / tot, p_edge) \
         + c_b * smooth_step((c_b - c_a) / tot, p_edge)
 
@@ -42,7 +47,7 @@ def overlap2_raw(c_a, c_b, p_edge):
 def overlap3(c_a, c_b, c_c, p_edge):
     """Pairwise generalization: each term gated on being the max
     (normalized switch arguments, as in overlap2)."""
-    tot = jnp.abs(c_a) + jnp.abs(c_b) + jnp.abs(c_c) + 1e-30
+    tot = jnp.abs(c_a) + jnp.abs(c_b) + jnp.abs(c_c) + 1e-15  # see overlap2
     sa = smooth_step((c_a - c_b) / tot, p_edge) * \
         smooth_step((c_a - c_c) / tot, p_edge)
     sb = smooth_step((c_b - c_a) / tot, p_edge) * \

@@ -17,10 +17,11 @@ The Pallas twins of the hot kernels live in ``repro.kernels``.
 from __future__ import annotations
 
 import enum
+import hashlib
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +36,37 @@ class MatchCondition(enum.Enum):
     SUBSET = 2      # generator tag set ⊆ user tags
     SUPERSET = 3    # generator tag set ⊇ user tags (paper default)
     INTERSECT = 4   # non-empty intersection
+
+
+@dataclass(frozen=True)
+class TimingStats:
+    """One timing measurement with its wall-clock noise: the median drives
+    calibration (robust to scheduler spikes), ``std``/``min`` are the noise
+    metadata persisted per cache entry and surfaced in fit diagnostics to
+    drive re-measurement heuristics (ROADMAP follow-up)."""
+
+    median: float
+    std: Optional[float] = None
+    min: Optional[float] = None
+
+    @classmethod
+    def coerce(cls, value: "TimerResult") -> "TimingStats":
+        """Accept either a bare seconds float (legacy/injected timers) or a
+        full :class:`TimingStats`."""
+        if isinstance(value, TimingStats):
+            return value
+        return cls(median=float(value))
+
+    def to_dict(self) -> Dict[str, float]:
+        d = {"median": float(self.median)}
+        if self.std is not None:
+            d["std"] = float(self.std)
+        if self.min is not None:
+            d["min"] = float(self.min)
+        return d
+
+
+TimerResult = Union[float, TimingStats]
 
 
 @dataclass
@@ -66,6 +98,11 @@ class MeasurementKernel:
         ``warmup=0`` skips the warmup entirely (the first trial then pays
         compilation — useful for cold-start measurement).
         """
+        return self.time_stats(trials=trials, warmup=warmup).median
+
+    def time_stats(self, *, trials: int = 20, warmup: int = 3
+                   ) -> TimingStats:
+        """One timing pass reported with its spread (median/std/min)."""
         jf = self.jitted()
         args = self.make_args()
         out = None
@@ -78,7 +115,8 @@ class MeasurementKernel:
             t0 = time.perf_counter()
             jax.block_until_ready(jf(*args))
             ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
+        return TimingStats(median=float(np.median(ts)),
+                           std=float(np.std(ts)), min=float(np.min(ts)))
 
 
 @dataclass
@@ -169,9 +207,10 @@ class KernelCollection:
 # ---------------------------------------------------------------------------
 
 
-def default_timer(kernel: MeasurementKernel, trials: int) -> float:
-    """The default injectable timer: one real timing pass on the kernel."""
-    return kernel.time(trials=trials)
+def default_timer(kernel: MeasurementKernel, trials: int) -> TimingStats:
+    """The default injectable timer: one real timing pass on the kernel,
+    reported with its wall-clock noise."""
+    return kernel.time_stats(trials=trials)
 
 
 class CountingTimer:
@@ -179,12 +218,12 @@ class CountingTimer:
     ran — the observable the measurement cache's zero-timing warm-path
     guarantee is asserted against (tests, CI smoke, CLI summary)."""
 
-    def __init__(self, timer: Callable[[MeasurementKernel, int], float]
+    def __init__(self, timer: Callable[[MeasurementKernel, int], TimerResult]
                  = default_timer):
         self._timer = timer
         self.calls = 0
 
-    def __call__(self, kernel: MeasurementKernel, trials: int) -> float:
+    def __call__(self, kernel: MeasurementKernel, trials: int) -> TimerResult:
         self.calls += 1
         return self._timer(kernel, trials)
 
@@ -205,8 +244,10 @@ def gather_feature_table(
     each kernel is timed at most ONCE per gather regardless of how many
     wall-time columns the table has, and its jaxpr is counted once.
 
-    ``timer(kernel, trials) -> seconds`` makes the measurement injectable
-    (deterministic tests, counters); ``cache`` is a
+    ``timer(kernel, trials)`` makes the measurement injectable
+    (deterministic tests, counters); it may return bare seconds or a
+    :class:`TimingStats` (median/std/min — the noise metadata lands in
+    ``FeatureTable.row_noise`` and the cache entry).  ``cache`` is a
     :class:`repro.profiles.MeasurementCache`-shaped object — on a cache hit
     neither the timer nor the jaxpr counter runs, so a warm recalibration
     performs zero timings.
@@ -218,24 +259,36 @@ def gather_feature_table(
     count_cols = [(j, f) for j, f in enumerate(features)
                   if not f.startswith("f_wall_time")]
     values = np.zeros((len(kernels), len(features)), np.float64)
+    row_noise: Dict[str, Dict[str, float]] = {}
     for i, k in enumerate(kernels):
         entry = cache.get(k, trials) if cache is not None else None
+        stats: Optional[TimingStats] = None
         if entry is not None:
             counts, wall = entry.counts, entry.wall_time
+            stats = entry.noise
             if wall_cols and wall is None:
                 # entry was gathered counts-only; backfill the timing
-                wall = timer(k, trials)
-                cache.put(k, trials, wall, counts)
+                stats = TimingStats.coerce(timer(k, trials))
+                wall = stats.median
+                cache.put(k, trials, wall, counts, noise=stats)
         else:
             counts = k.counts()
-            wall = timer(k, trials) if wall_cols else None
+            if wall_cols:
+                stats = TimingStats.coerce(timer(k, trials))
+                wall = stats.median
+            else:
+                wall = None
             if cache is not None:
-                cache.put(k, trials, wall, counts)
+                cache.put(k, trials, wall, counts, noise=stats)
+        if stats is not None and (stats.std is not None
+                                  or stats.min is not None):
+            row_noise[k.name] = stats.to_dict()
         for j, f in count_cols:
             values[i, j] = counts[f]
         for j in wall_cols:
             values[i, j] = wall
-    return FeatureTable(features, values, [k.name for k in kernels])
+    return FeatureTable(features, values, [k.name for k in kernels],
+                        row_noise)
 
 
 def gather_feature_values(
@@ -249,6 +302,42 @@ def gather_feature_values(
     """Dict-per-row view of :func:`gather_feature_table` (original API)."""
     return gather_feature_table(features, kernels, trials=trials,
                                 timer=timer, cache=cache).rows()
+
+
+def unit_hash(*parts: object) -> float:
+    """Deterministic draw in [0, 1) from the ':'-joined identity parts —
+    THE unit-hash of the calibration subsystem (holdout assignment,
+    synthetic-device noise).  One definition, so 'same identity → same
+    draw, everywhere, forever' cannot silently diverge."""
+    digest = hashlib.sha256(":".join(str(p) for p in parts).encode())
+    return int(digest.hexdigest()[:12], 16) / float(16 ** 12)
+
+
+def holdout_split(table: FeatureTable, *, holdout_fraction: float = 0.25,
+                  salt: str = "holdout") -> Tuple[FeatureTable, FeatureTable]:
+    """Deterministic train/held-out split of a gathered feature table.
+
+    Assignment ranks rows by a hash of each *row name* (the
+    measurement-kernel identity), not its position, and holds out the
+    ``round(holdout_fraction · n)`` lowest-ranked rows (clamped so both
+    sides are non-empty) — so the same kernel variant lands on the same
+    side of the split on every machine, which is what makes per-variant
+    held-out error columns comparable across profiles in a cross-machine
+    study (paper §8's table shape), and the holdout size is exact rather
+    than at the mercy of the hash draw.  ``salt`` derives independent
+    splits from one battery.
+    """
+    if len(table) < 2:
+        raise ValueError(
+            f"cannot split a {len(table)}-row table into train + holdout")
+    scores = {name: (unit_hash(salt, name), name)
+              for name in table.row_names}
+    order = sorted(range(len(table)), key=lambda i: scores[table.row_names[i]])
+    k = int(round(holdout_fraction * len(table)))
+    k = min(max(k, 1), len(table) - 1)
+    hold = sorted(order[:k])
+    train = sorted(order[k:])
+    return table.select(train), table.select(hold)
 
 
 # ---------------------------------------------------------------------------

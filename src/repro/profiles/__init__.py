@@ -13,6 +13,7 @@ anywhere without re-measuring.
 from repro.profiles.cache import (
     CACHE_SCHEMA_VERSION,
     CacheEntry,
+    GCStats,
     MeasurementCache,
 )
 from repro.profiles.fingerprint import DeviceFingerprint
@@ -22,6 +23,7 @@ from repro.profiles.profile import (
     ModelFit,
     ProfileError,
     load_profile,
+    merge_profiles,
     save_profile,
 )
 
@@ -29,11 +31,13 @@ __all__ = [
     "CACHE_SCHEMA_VERSION",
     "CacheEntry",
     "DeviceFingerprint",
+    "GCStats",
     "MachineProfile",
     "MeasurementCache",
     "ModelFit",
     "PROFILE_SCHEMA_VERSION",
     "ProfileError",
     "load_profile",
+    "merge_profiles",
     "save_profile",
 ]

@@ -26,23 +26,50 @@ from __future__ import annotations
 
 import hashlib
 import json
+import re
+import time
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Dict, Mapping, Optional
 
 from repro.checkpoint.manager import atomic_write_json
 from repro.core.counting import FeatureCounts
+from repro.core.uipick import TimingStats
 
 CACHE_SCHEMA_VERSION = 1
+
+# files the cache owns: entries are always named by a 64-hex SHA-256
+# digest — anything else in the directory is not ours to count or delete
+_ENTRY_NAME = re.compile(r"[0-9a-f]{64}\.json")
 
 
 @dataclass
 class CacheEntry:
     """One kernel's reusable measurement: its counted features and (median)
-    wall time.  ``wall_time`` is None for counts-only gathers."""
+    wall time.  ``wall_time`` is None for counts-only gathers; ``noise``
+    carries the measurement's wall-clock spread (std/min) when the timer
+    reported it — entries written before noise metadata existed read back
+    with ``noise=None`` and are still hits."""
 
     counts: FeatureCounts
     wall_time: Optional[float]
+    noise: Optional[TimingStats] = None
+
+
+@dataclass(frozen=True)
+class GCStats:
+    """Outcome of one :meth:`MeasurementCache.gc` sweep."""
+
+    kept: int = 0
+    dropped_foreign: int = 0
+    dropped_old: int = 0
+    dropped_corrupt: int = 0
+    dropped_schema: int = 0
+
+    @property
+    def dropped(self) -> int:
+        return (self.dropped_foreign + self.dropped_old
+                + self.dropped_corrupt + self.dropped_schema)
 
 
 class MeasurementCache:
@@ -97,17 +124,92 @@ class MeasurementCache:
         counts = FeatureCounts(
             {str(k): float(v) for k, v in payload["counts"].items()})
         wall = payload.get("wall_time")
-        return CacheEntry(counts, float(wall) if wall is not None else None)
+        noise = None
+        raw_noise = payload.get("noise")
+        if isinstance(raw_noise, dict) and "median" in raw_noise:
+            try:
+                noise = TimingStats(
+                    median=float(raw_noise["median"]),
+                    std=(float(raw_noise["std"])
+                         if raw_noise.get("std") is not None else None),
+                    min=(float(raw_noise["min"])
+                         if raw_noise.get("min") is not None else None))
+            except (TypeError, ValueError):
+                noise = None            # malformed noise never blocks a hit
+        return CacheEntry(counts, float(wall) if wall is not None else None,
+                          noise)
 
     def put(self, kernel, trials: int, wall_time: Optional[float],
-            counts: Mapping[str, float]) -> None:
+            counts: Mapping[str, float], *,
+            noise: Optional[TimingStats] = None) -> None:
         key = self._key_payload(kernel.name, kernel.sizes, trials)
-        atomic_write_json(self._path(key), {
+        payload: Dict[str, Any] = {
             "key": key,
             "wall_time": wall_time,
             "counts": {k: float(v) for k, v in sorted(counts.items())},
-        })
+        }
+        if noise is not None and (noise.std is not None
+                                  or noise.min is not None):
+            payload["noise"] = noise.to_dict()
+        atomic_write_json(self._path(key), payload)
 
     def __len__(self) -> int:
-        return sum(1 for _ in self.root.glob("*.json")) \
-            if self.root.is_dir() else 0
+        if not self.root.is_dir():
+            return 0
+        return sum(1 for p in self.root.glob("*.json")
+                   if _ENTRY_NAME.fullmatch(p.name))
+
+    # -- eviction ------------------------------------------------------------
+    def gc(self, *, max_age: Optional[float] = None,
+           drop_foreign: bool = True, now: Optional[float] = None) -> GCStats:
+        """Evict stale entries (the ROADMAP's cache-eviction follow-up).
+
+        Drops, in this order of precedence: corrupt files (unparseable or
+        not cache-entry shaped), entries written under a different
+        ``CACHE_SCHEMA_VERSION`` (their embedded key can never match a
+        ``get`` again — they are permanently dead weight), entries whose
+        embedded key names a device fingerprint other than this cache's
+        (``drop_foreign``), and entries older than ``max_age`` seconds by
+        file mtime.  Current-schema entries belonging to this fingerprint
+        and younger than ``max_age`` are untouched, so a warm gather
+        behaves identically after a GC of foreign entries.
+        """
+        if now is None:
+            now = time.time()
+        kept = foreign = old = corrupt = stale_schema = 0
+        if not self.root.is_dir():
+            return GCStats()
+        for path in sorted(self.root.glob("*.json")):
+            # a profile the user saved next to the cache, a README, ... —
+            # not ours to delete, never classified as a corrupt entry
+            if not _ENTRY_NAME.fullmatch(path.name):
+                continue
+            try:
+                mtime = path.stat().st_mtime
+            except OSError:
+                continue        # vanished under a concurrent sweep
+            try:
+                payload = json.loads(path.read_text())
+                key = payload["key"] if isinstance(payload, dict) else None
+                fp = key["fingerprint"] if isinstance(key, dict) else None
+                if not isinstance(fp, str):
+                    raise ValueError("entry has no fingerprint")
+            except (OSError, ValueError, KeyError, TypeError):
+                path.unlink(missing_ok=True)
+                corrupt += 1
+                continue
+            if key.get("schema") != CACHE_SCHEMA_VERSION:
+                path.unlink(missing_ok=True)
+                stale_schema += 1
+                continue
+            if drop_foreign and fp != self.fingerprint.id:
+                path.unlink(missing_ok=True)
+                foreign += 1
+                continue
+            if max_age is not None and now - mtime > max_age:
+                path.unlink(missing_ok=True)
+                old += 1
+                continue
+            kept += 1
+        return GCStats(kept=kept, dropped_foreign=foreign, dropped_old=old,
+                       dropped_corrupt=corrupt, dropped_schema=stale_schema)

@@ -1,11 +1,23 @@
 """``python -m repro.calibrate`` — the once-per-machine calibration CLI.
 
-Wires the whole pipeline: UIPiCK filter tags → measurement-kernel
-generation → feature gathering (through the content-addressed measurement
-cache) → Levenberg-Marquardt fit → atomic profile save.  A warm rerun with
-the same cache directory performs ZERO kernel timings (every kernel hits
-the cache) and writes a byte-identical profile; ``--expect-zero-timings``
-turns that guarantee into an exit code for CI.
+Default command: wires the whole pipeline — UIPiCK filter tags →
+measurement-kernel generation → feature gathering (through the
+content-addressed measurement cache) → Levenberg-Marquardt fit → atomic
+profile save.  A warm rerun with the same cache directory performs ZERO
+kernel timings (every kernel hits the cache) and writes a byte-identical
+profile; ``--expect-zero-timings`` turns that guarantee into an exit code
+for CI.  ``--zoo`` fits the whole model-zoo scope ladder over one battery
+with a held-out split (the cross-machine study artifact); ``--synthetic``
+runs against a synthetic ground-truth device instead of real hardware.
+
+Subcommands (cross-machine studies):
+
+    compare  ≥2 profiles → per-model × per-variant held-out relative-error
+             report (markdown + JSON); machines must be distinct
+    merge    same-machine profiles → one profile (union of fits; conflicts
+             are errors); with --fleet, cross-machine → fleet bundle
+    gc       evict measurement-cache entries (foreign fingerprint,
+             corrupt, or older than --max-age)
 
 Examples:
 
@@ -13,15 +25,17 @@ Examples:
     python -m repro.calibrate --out machine_profile.json \
         --cache-dir ~/.cache/repro-measurements --trials 8
 
-    # quick smoke battery; second run must not time anything
-    python -m repro.calibrate --smoke --cache-dir /tmp/mc --out p1.json
-    python -m repro.calibrate --smoke --cache-dir /tmp/mc --out p2.json \
-        --expect-zero-timings
+    # cross-machine study on two synthetic devices, then compare
+    python -m repro.calibrate --zoo --synthetic apex --out a.json
+    python -m repro.calibrate --zoo --synthetic bulk --out b.json
+    python -m repro.calibrate compare a.json b.json --report report.md
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+from pathlib import Path
 from typing import List, Optional
 
 from repro.core.calibrate import fit_model
@@ -42,7 +56,12 @@ from repro.profiles.presets import (
     SMOKE_MODEL_EXPR,
     SMOKE_TAGS,
 )
-from repro.profiles.profile import MachineProfile, ModelFit, save_profile
+from repro.profiles.profile import (
+    MachineProfile,
+    ModelFit,
+    ProfileError,
+    save_profile,
+)
 
 _MATCH = {c.name.lower(): c for c in MatchCondition}
 
@@ -51,7 +70,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.calibrate",
         description="Calibrate this machine's black-box cost model and "
-                    "save a reusable profile.")
+                    "save a reusable profile.  Subcommands: compare, "
+                    "merge, gc (see module docstring).")
     ap.add_argument("--out", default="machine_profile.json",
                     help="profile JSON destination (atomic write)")
     ap.add_argument("--cache-dir", default=None,
@@ -74,52 +94,231 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--smoke", action="store_true",
                     help="use the tiny smoke battery + 2-parameter model "
                          "(CI-sized)")
+    ap.add_argument("--zoo", action="store_true",
+                    help="fit the whole model zoo over one battery with a "
+                         "held-out split (cross-machine study artifact)")
+    ap.add_argument("--holdout-fraction", type=float, default=0.25,
+                    help="held-out fraction of the battery (with --zoo)")
+    ap.add_argument("--synthetic", default=None, metavar="DEVICE",
+                    help="calibrate a synthetic ground-truth device "
+                         "(apex/bulk/citra) instead of real hardware")
+    ap.add_argument("--synthetic-noise", type=float, default=0.0,
+                    help="relative timing noise of the synthetic device")
     ap.add_argument("--expect-zero-timings", action="store_true",
                     help="exit 1 unless every kernel came from the cache "
                          "(no timing passes ran)")
     return ap
 
 
-def main(argv: Optional[List[str]] = None) -> int:
-    args = build_parser().parse_args(argv)
-    expr = args.expr or (SMOKE_MODEL_EXPR if args.smoke else BASE_MODEL_EXPR)
-    tags = args.tags or (SMOKE_TAGS if args.smoke else CALIBRATION_TAGS)
+def _noise_line(table) -> str:
+    s = table.noise_summary()
+    if not s:
+        return "wall-clock noise: n/a (no spread metadata)"
+    return (f"wall-clock noise: max rel std {s['max_rel_std'] * 100:.2f}% "
+            f"median {s['median_rel_std'] * 100:.2f}% "
+            f"over {int(s['rows'])} rows")
 
-    fingerprint = DeviceFingerprint.local()
-    model = Model(args.output_feature, expr)
-    kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
-        tags, generator_match_cond=_MATCH[args.match])
-    if not kernels:
-        print(f"no measurement kernels match tags {tags!r}", file=sys.stderr)
-        return 2
+
+def _calibrate(argv: Optional[List[str]]) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.synthetic:
+        from repro.testing.synthdev import fleet_device
+        try:
+            device = fleet_device(args.synthetic,
+                                  noise=args.synthetic_noise,
+                                  output_feature=args.output_feature)
+        except (KeyError, ValueError) as e:
+            print(f"[calibrate] {e.args[0]}", file=sys.stderr)
+            return 2
+        fingerprint = device.fingerprint
+        base_timer = device.timer
+    else:
+        fingerprint = DeviceFingerprint.local()
+        base_timer = None
 
     cache = MeasurementCache(args.cache_dir, fingerprint) \
         if args.cache_dir else None
-    timer = CountingTimer()
-    print(f"[calibrate] device={fingerprint.id} kernels={len(kernels)} "
-          f"trials={args.trials} cache={args.cache_dir or 'off'}")
-    table = gather_feature_table(model.all_features(), kernels,
-                                 trials=args.trials, timer=timer,
-                                 cache=cache)
-    fit = fit_model(model, table, nonneg=True)
+    timer = CountingTimer(base_timer) if base_timer else CountingTimer()
 
-    profile = MachineProfile(
-        fingerprint=fingerprint,
-        fits={args.name: ModelFit.from_fit(model, fit)},
-        trials=args.trials,
-        kernel_names=[k.name for k in kernels])
-    save_profile(profile, args.out)
+    if args.zoo:
+        from repro.studies import (
+            MODEL_ZOO, STUDY_SMOKE_TAGS, STUDY_TAGS, StudyError, run_study,
+        )
+        tags = args.tags or (STUDY_SMOKE_TAGS if args.smoke else STUDY_TAGS)
+        print(f"[calibrate] device={fingerprint.id} zoo="
+              f"{[e.name for e in MODEL_ZOO]} trials={args.trials} "
+              f"cache={args.cache_dir or 'off'}")
+        try:
+            profile = run_study(
+                fingerprint=fingerprint, timer=timer, cache=cache,
+                tags=tags, output_feature=args.output_feature,
+                trials=args.trials,
+                holdout_fraction=args.holdout_fraction,
+                match=_MATCH[args.match])
+        except StudyError as e:
+            print(f"[calibrate] {e}", file=sys.stderr)
+            return 2
+        save_profile(profile, args.out)
+        print(f"[calibrate] {_noise_line(profile.holdout)}")
+        for name, mf in sorted(profile.fits.items()):
+            print(f"[calibrate] fit {name}: residual="
+                  f"{mf.fit.residual_norm:.3g} converged="
+                  f"{mf.fit.converged} params={mf.params}")
+    else:
+        expr = args.expr or (SMOKE_MODEL_EXPR if args.smoke
+                             else BASE_MODEL_EXPR)
+        tags = args.tags or (SMOKE_TAGS if args.smoke else CALIBRATION_TAGS)
+        model = Model(args.output_feature, expr)
+        kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
+            tags, generator_match_cond=_MATCH[args.match])
+        if not kernels:
+            print(f"no measurement kernels match tags {tags!r}",
+                  file=sys.stderr)
+            return 2
+        print(f"[calibrate] device={fingerprint.id} kernels={len(kernels)} "
+              f"trials={args.trials} cache={args.cache_dir or 'off'}")
+        table = gather_feature_table(model.all_features(), kernels,
+                                     trials=args.trials, timer=timer,
+                                     cache=cache)
+        fit = fit_model(model, table, nonneg=True)
+        profile = MachineProfile(
+            fingerprint=fingerprint,
+            fits={args.name: ModelFit.from_fit(model, fit)},
+            trials=args.trials,
+            kernel_names=[k.name for k in kernels])
+        save_profile(profile, args.out)
+        print(f"[calibrate] {_noise_line(table)}")
+        print(f"[calibrate] fit residual={fit.residual_norm:.3g} "
+              f"converged={fit.converged} params={fit.params}")
 
     hits = cache.hits if cache is not None else 0
     print(f"[calibrate] timings_performed={timer.calls} cache_hits={hits}")
-    print(f"[calibrate] fit residual={fit.residual_norm:.3g} "
-          f"converged={fit.converged} params={fit.params}")
     print(f"[calibrate] profile -> {args.out}")
     if args.expect_zero_timings and timer.calls:
         print(f"[calibrate] FAIL: expected a fully warm cache but "
               f"{timer.calls} kernels were timed", file=sys.stderr)
         return 1
     return 0
+
+
+# ---------------------------------------------------------------------------
+# Subcommands
+# ---------------------------------------------------------------------------
+
+
+def _cmd_compare(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.calibrate compare",
+        description="Cross-machine accuracy report from ≥2 study profiles "
+                    "(per-model × per-kernel-variant held-out relative "
+                    "error).")
+    ap.add_argument("profiles", nargs="+",
+                    help="machine-profile or fleet-bundle JSON paths")
+    ap.add_argument("--report", default=None,
+                    help="markdown report destination (default: stdout)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="JSON report destination")
+    args = ap.parse_args(argv)
+
+    from repro.studies import StudyError, compare_profiles, load_profiles_any
+    try:
+        profiles = [p for path in args.profiles
+                    for p in load_profiles_any(path)]
+        report = compare_profiles(profiles)
+    except (StudyError, ProfileError, ValueError) as e:
+        # ValueError: malformed holdout data (zero outputs, missing
+        # feature columns) surfaced by the accuracy evaluation
+        print(f"[compare] {e}", file=sys.stderr)
+        return 3
+    md = report.to_markdown()
+    if args.report:
+        Path(args.report).write_text(md)
+        print(f"[compare] report -> {args.report}")
+    else:
+        print(md)
+    if args.json_out:
+        Path(args.json_out).write_text(
+            json.dumps(report.to_json_dict(), indent=2, sort_keys=True))
+        print(f"[compare] json -> {args.json_out}")
+    for fp in report.machines:
+        summary = " ".join(f"{m}={report.summary[fp][m] * 100:.2f}%"
+                           for m in report.model_names
+                           if m in report.summary[fp])
+        print(f"[compare] {fp}: {summary}")
+    return 0
+
+
+def _cmd_merge(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.calibrate merge",
+        description="Merge profiles.  Same machine: union of fits "
+                    "(conflicts are errors).  Different machines: "
+                    "requires --fleet, producing a fleet bundle.")
+    ap.add_argument("profiles", nargs="+",
+                    help="machine-profile or fleet-bundle JSON paths")
+    ap.add_argument("--out", required=True, help="output JSON path")
+    ap.add_argument("--fleet", action="store_true",
+                    help="allow cross-machine inputs; write a fleet bundle")
+    args = ap.parse_args(argv)
+
+    from repro.checkpoint.manager import atomic_write_json
+    from repro.studies import (
+        StudyError, fleet_to_dict, load_profiles_any, merge_any,
+    )
+    try:
+        profiles = [p for path in args.profiles
+                    for p in load_profiles_any(path)]
+        if len(profiles) < 2:
+            print(f"[merge] need ≥ 2 profiles, got {len(profiles)}",
+                  file=sys.stderr)
+            return 3
+        merged = merge_any(profiles, allow_cross_machine=args.fleet)
+    except (StudyError, ProfileError, ValueError) as e:
+        print(f"[merge] {e}", file=sys.stderr)
+        return 3
+    if args.fleet:
+        atomic_write_json(Path(args.out), fleet_to_dict(merged))
+        print(f"[merge] fleet bundle ({len(merged)} machines) -> "
+              f"{args.out}")
+    else:
+        save_profile(merged[0], args.out)
+        print(f"[merge] profile ({len(merged[0].fits)} fits) -> {args.out}")
+    return 0
+
+
+def _cmd_gc(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.calibrate gc",
+        description="Evict measurement-cache entries: corrupt files, "
+                    "entries from other devices, entries older than "
+                    "--max-age.")
+    ap.add_argument("--cache-dir", required=True,
+                    help="measurement cache directory to sweep")
+    ap.add_argument("--max-age", type=float, default=None, metavar="SECONDS",
+                    help="also drop entries older than this many seconds")
+    ap.add_argument("--keep-foreign", action="store_true",
+                    help="keep entries from other device fingerprints")
+    args = ap.parse_args(argv)
+
+    cache = MeasurementCache(args.cache_dir, DeviceFingerprint.local())
+    stats = cache.gc(max_age=args.max_age,
+                     drop_foreign=not args.keep_foreign)
+    print(f"[gc] kept={stats.kept} dropped_foreign={stats.dropped_foreign} "
+          f"dropped_old={stats.dropped_old} "
+          f"dropped_corrupt={stats.dropped_corrupt} "
+          f"dropped_schema={stats.dropped_schema}")
+    return 0
+
+
+_SUBCOMMANDS = {"compare": _cmd_compare, "merge": _cmd_merge, "gc": _cmd_gc}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] in _SUBCOMMANDS:
+        return _SUBCOMMANDS[argv[0]](argv[1:])
+    return _calibrate(argv)
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ from typing import Any, Dict, List, Mapping, Optional
 
 from repro.checkpoint.manager import atomic_write_json
 from repro.core.calibrate import FitResult
-from repro.core.model import Model
+from repro.core.model import FeatureTable, Model
 from repro.profiles.fingerprint import DeviceFingerprint
 
 PROFILE_SCHEMA_VERSION = 1
@@ -86,6 +86,10 @@ class MachineProfile:
     trials: int = 0
     kernel_names: List[str] = field(default_factory=list)
     schema_version: int = PROFILE_SCHEMA_VERSION
+    # held-out measurement rows (never seen by any fit): what cross-machine
+    # accuracy reports evaluate stored fits against, without re-measuring.
+    # Optional — profiles written before the study subsystem load fine.
+    holdout: Optional[FeatureTable] = None
 
     def fit_for(self, model: Model) -> ModelFit:
         """The stored fit matching ``model`` (by content signature)."""
@@ -99,13 +103,16 @@ class MachineProfile:
             f"(signature {sig}); stored fits: {have}")
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        out = {
             "schema_version": self.schema_version,
             "fingerprint": self.fingerprint.to_dict(),
             "trials": self.trials,
             "kernel_names": list(self.kernel_names),
             "fits": {name: mf.to_dict() for name, mf in self.fits.items()},
         }
+        if self.holdout is not None:
+            out["holdout"] = self.holdout.to_dict()
+        return out
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "MachineProfile":
@@ -116,6 +123,7 @@ class MachineProfile:
                 f"(this build reads version {PROFILE_SCHEMA_VERSION}); "
                 f"re-run `python -m repro.calibrate` to regenerate")
         try:
+            holdout = d.get("holdout")
             return cls(
                 fingerprint=DeviceFingerprint.from_dict(d["fingerprint"]),
                 fits={str(name): ModelFit.from_dict(mf)
@@ -123,9 +131,104 @@ class MachineProfile:
                 trials=int(d.get("trials", 0)),
                 kernel_names=[str(n) for n in d.get("kernel_names", [])],
                 schema_version=int(version),
+                holdout=(FeatureTable.from_dict(holdout)
+                         if holdout is not None else None),
             )
         except (KeyError, TypeError, ValueError) as e:
             raise ProfileError(f"malformed profile: {e!r}") from e
+
+
+def _merge_holdouts(tables: "List[Optional[FeatureTable]]"
+                    ) -> Optional[FeatureTable]:
+    """Merge the held-out tables of same-machine profiles.
+
+    Studies over the same battery hold out the same kernel variants (the
+    split hashes row names), possibly with different feature columns (a
+    narrower zoo gathers fewer features) — those merge column-wise.
+    Disagreeing row sets or disagreeing values for a shared column are
+    conflicts: a merged profile must never evaluate fits on rows their
+    study trained on, or mix two measurements of the same quantity.
+    """
+    import numpy as np
+
+    tables = [t for t in tables if t is not None]
+    if not tables:
+        return None
+    base = tables[0]
+    for other in tables[1:]:
+        if other.row_names != base.row_names:
+            raise ProfileError(
+                f"conflicting held-out splits while merging: "
+                f"{base.row_names} vs {other.row_names} — profiles from "
+                f"different batteries cannot share one holdout")
+    feature_ids: List[str] = []
+    for t in tables:
+        for f in t.feature_ids:
+            if f not in feature_ids:
+                feature_ids.append(f)
+    vals = np.zeros((len(base), len(feature_ids)), np.float64)
+    for j, f in enumerate(feature_ids):
+        cols = [t.column(f) for t in tables if f in t.feature_ids]
+        for c in cols[1:]:
+            if not np.array_equal(cols[0], c):
+                raise ProfileError(
+                    f"conflicting held-out measurements for feature {f!r} "
+                    f"while merging — remeasure or merge profiles from "
+                    f"the same gather")
+        vals[:, j] = cols[0]
+    noise: Dict[str, Dict[str, float]] = {}
+    for t in tables:
+        for name, d in t.row_noise.items():
+            if name in noise and noise[name] != dict(d):
+                raise ProfileError(
+                    f"conflicting noise metadata for held-out row "
+                    f"{name!r} while merging")
+            noise[name] = dict(d)
+    return FeatureTable(feature_ids, vals, list(base.row_names), noise)
+
+
+def merge_profiles(profiles: "List[MachineProfile]") -> MachineProfile:
+    """Merge ≥ 2 profiles calibrated on the SAME machine into one profile
+    holding the union of their fits (e.g. zoo models calibrated in separate
+    sessions).
+
+    Raises :class:`ProfileError` when the fingerprints differ (numbers are
+    per-machine; cross-machine collections are a fleet bundle, see
+    ``repro.studies``), when the same fit name maps to conflicting payloads
+    (different signature or parameters), or when held-out tables disagree
+    (see :func:`_merge_holdouts`) — merging must never silently prefer one
+    measurement of the truth over another.  A profile without a holdout
+    (legacy single-fit calibration) contributes none; note its fits may
+    have trained on rows that are held out elsewhere.
+    """
+    if len(profiles) < 2:
+        raise ProfileError(f"merge needs at least 2 profiles, "
+                           f"got {len(profiles)}")
+    base = profiles[0]
+    for other in profiles[1:]:
+        if other.fingerprint != base.fingerprint:
+            raise ProfileError(
+                f"cannot merge profiles from different machines: "
+                f"{base.fingerprint.id!r} vs {other.fingerprint.id!r} "
+                f"(use a fleet bundle for cross-machine collections)")
+    fits: Dict[str, ModelFit] = {}
+    kernel_names: List[str] = []
+    for prof in profiles:
+        for name, mf in prof.fits.items():
+            if name in fits and fits[name].to_dict() != mf.to_dict():
+                raise ProfileError(
+                    f"conflicting fit {name!r} while merging: "
+                    f"signature/parameters disagree between inputs — "
+                    f"recalibrate or rename one of them")
+            fits[name] = mf
+        for k in prof.kernel_names:
+            if k not in kernel_names:
+                kernel_names.append(k)
+    return MachineProfile(
+        fingerprint=base.fingerprint, fits=fits,
+        trials=max(p.trials for p in profiles),
+        kernel_names=kernel_names,
+        holdout=_merge_holdouts([p.holdout for p in profiles]))
 
 
 def save_profile(profile: MachineProfile, path) -> Path:

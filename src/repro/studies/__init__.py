@@ -1,0 +1,54 @@
+"""Cross-machine study subsystem: model zoo, one-battery multi-fit,
+profile compare/merge, and accuracy reports.
+
+* :data:`MODEL_ZOO` / :class:`ZooEntry` — named model forms at increasing
+  scope (linear flop-only → flop+membw → nonlinear overlap)
+* :func:`run_study` — gather one battery, fit the whole zoo, persist fits
+  + held-out rows into a :class:`~repro.profiles.MachineProfile`
+* :func:`compare_profiles` / :class:`StudyReport` — per-model ×
+  per-variant held-out relative-error tables (JSON + markdown)
+* :func:`merge_any` / fleet bundles — collect profiles across machines
+"""
+from repro.studies.study import (
+    FLEET_SCHEMA_VERSION,
+    StudyError,
+    StudyReport,
+    compare_profiles,
+    fleet_to_dict,
+    load_profiles_any,
+    merge_any,
+    profile_accuracy,
+    run_study,
+)
+from repro.studies.zoo import (
+    LIN_FLOP,
+    LIN_FLOP_MEM,
+    MODEL_ZOO,
+    OVL_FLOP_MEM,
+    STUDY_SMOKE_TAGS,
+    STUDY_TAGS,
+    ZooEntry,
+    zoo_entry,
+    zoo_models,
+)
+
+__all__ = [
+    "FLEET_SCHEMA_VERSION",
+    "LIN_FLOP",
+    "LIN_FLOP_MEM",
+    "MODEL_ZOO",
+    "OVL_FLOP_MEM",
+    "STUDY_SMOKE_TAGS",
+    "STUDY_TAGS",
+    "StudyError",
+    "StudyReport",
+    "ZooEntry",
+    "compare_profiles",
+    "fleet_to_dict",
+    "load_profiles_any",
+    "merge_any",
+    "profile_accuracy",
+    "run_study",
+    "zoo_entry",
+    "zoo_models",
+]

@@ -1,0 +1,300 @@
+"""Cross-machine studies: one battery → many fits → comparable reports.
+
+This is the paper's §8 evaluation loop as a subsystem:
+
+1. :func:`run_study` gathers ONE timing battery on a machine (through the
+   measurement cache and the injectable timer seam, so synthetic devices
+   and warm reruns work identically), splits it into train/held-out rows
+   deterministically by kernel identity, fits every model-zoo form on the
+   train rows, and persists everything — fits AND held-out measurements —
+   into one :class:`~repro.profiles.MachineProfile`.
+2. :func:`compare_profiles` takes ≥ 2 such profiles and produces the
+   paper's Tables 3–6 shape: per-model × per-kernel-variant relative error
+   on the held-out split, per machine, with geometric-mean summaries —
+   rendered as JSON and markdown.
+3. :func:`merge_any` / fleet bundles collect profiles across machines:
+   same-fingerprint profiles merge fit-by-fit (conflicts are errors, see
+   :func:`repro.profiles.merge_profiles`); distinct fingerprints live side
+   by side in a fleet bundle keyed by fingerprint id.
+
+Because the held-out rows ride inside the profile, a compare run needs no
+hardware access at all — accuracy claims become checkable artifacts.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.calibrate import fit_models, gmre_of, relative_errors
+from repro.core.model import FeatureTable
+from repro.core.uipick import (
+    ALL_GENERATORS,
+    KernelCollection,
+    MatchCondition,
+    gather_feature_table,
+    holdout_split,
+)
+from repro.profiles.fingerprint import DeviceFingerprint
+from repro.profiles.presets import DEFAULT_OUTPUT_FEATURE
+from repro.profiles.profile import (
+    MachineProfile,
+    ModelFit,
+    ProfileError,
+    load_profile,
+    merge_profiles,
+)
+from repro.studies.zoo import MODEL_ZOO, STUDY_TAGS, ZooEntry
+
+FLEET_SCHEMA_VERSION = 1
+
+
+class StudyError(RuntimeError):
+    """A study input that cannot be used (missing holdout, duplicate or
+    conflicting machines, malformed fleet bundle)."""
+
+
+# ---------------------------------------------------------------------------
+# Running one machine's study
+# ---------------------------------------------------------------------------
+
+
+def run_study(
+    *,
+    fingerprint: DeviceFingerprint,
+    timer: Optional[Callable] = None,
+    cache: Optional[Any] = None,
+    entries: Sequence[ZooEntry] = tuple(MODEL_ZOO),
+    tags: Sequence[str] = tuple(STUDY_TAGS),
+    output_feature: str = DEFAULT_OUTPUT_FEATURE,
+    trials: int = 8,
+    holdout_fraction: float = 0.25,
+    match: MatchCondition = MatchCondition.INTERSECT,
+) -> MachineProfile:
+    """One machine's full study: gather once, fit the whole zoo, persist
+    fits + held-out rows into a single profile."""
+    entries = list(entries)
+    if not entries:
+        raise StudyError("a study needs at least one zoo entry")
+    if not 0.0 < holdout_fraction < 1.0:
+        raise StudyError(
+            f"holdout_fraction must be in (0, 1), got {holdout_fraction}; "
+            f"a study without held-out rows cannot report accuracy, and "
+            f"holding out (nearly) everything leaves nothing to fit")
+    kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
+        list(tags), generator_match_cond=match)
+    if len(kernels) < 2:
+        raise StudyError(
+            f"study battery matched {len(kernels)} kernels for tags "
+            f"{list(tags)!r}; need ≥ 2 for a train/holdout split")
+
+    models = {e.name: e.model(output_feature) for e in entries}
+    features: List[str] = [output_feature]
+    for m in models.values():
+        for f in m.feature_names:
+            if f not in features:
+                features.append(f)
+
+    table = gather_feature_table(features, kernels, trials=trials,
+                                 timer=timer, cache=cache)
+    train, holdout = holdout_split(table, holdout_fraction=holdout_fraction)
+    widest = max(len(m.param_names) for m in models.values())
+    if len(train) < widest:
+        raise StudyError(
+            f"train split has {len(train)} rows but the widest zoo model "
+            f"has {widest} parameters — an underdetermined fit would "
+            f"'converge' to arbitrary values; widen the battery tags")
+    fits = fit_models(models, train,
+                      nonneg={e.name: e.nonneg for e in entries})
+    return MachineProfile(
+        fingerprint=fingerprint,
+        fits={name: ModelFit.from_fit(models[name], fit)
+              for name, fit in fits.items()},
+        trials=trials,
+        kernel_names=[k.name for k in kernels],
+        holdout=holdout)
+
+
+# ---------------------------------------------------------------------------
+# Accuracy evaluation + report
+# ---------------------------------------------------------------------------
+
+
+def profile_accuracy(profile: MachineProfile
+                     ) -> Dict[str, Dict[str, float]]:
+    """Per-fit × per-held-out-variant relative error for one profile."""
+    if profile.holdout is None or len(profile.holdout) == 0:
+        raise StudyError(
+            f"profile for {profile.fingerprint.id!r} carries no held-out "
+            f"measurements; re-run the study (run_study / `--zoo`) to "
+            f"produce a comparable profile")
+    out: Dict[str, Dict[str, float]] = {}
+    for name, mf in sorted(profile.fits.items()):
+        out[name] = relative_errors(mf.model(), mf.params, profile.holdout)
+    return out
+
+
+def _noise_summary(table: Optional[FeatureTable]) -> Dict[str, float]:
+    """Relative wall-clock noise summary of a table (none → empty)."""
+    return table.noise_summary() if table is not None else {}
+
+
+@dataclass
+class StudyReport:
+    """Cross-machine accuracy report (paper Tables 3–6 shape)."""
+
+    # fingerprint id → fit name → kernel-variant row name → relative error
+    per_variant: Dict[str, Dict[str, Dict[str, float]]]
+    # fingerprint id → fit name → geometric-mean relative error
+    summary: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # fingerprint id → wall-clock noise summary of the held-out rows
+    noise: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # fingerprint id → fit name → fitted parameters (fit diagnostics)
+    params: Dict[str, Dict[str, Dict[str, float]]] = field(
+        default_factory=dict)
+
+    @property
+    def machines(self) -> List[str]:
+        return sorted(self.per_variant)
+
+    @property
+    def model_names(self) -> List[str]:
+        return sorted({n for per_fit in self.per_variant.values()
+                       for n in per_fit})
+
+    def to_json_dict(self) -> Dict[str, Any]:
+        return {
+            "fleet_schema_version": FLEET_SCHEMA_VERSION,
+            "machines": self.machines,
+            "models": self.model_names,
+            "per_variant": self.per_variant,
+            "summary": self.summary,
+            "noise": self.noise,
+            "params": self.params,
+        }
+
+    def to_markdown(self) -> str:
+        models = self.model_names
+        lines = ["# Cross-machine accuracy report", ""]
+        lines.append(f"Machines: {', '.join(self.machines)}")
+        lines.append("")
+        lines.append("## Held-out geometric-mean relative error")
+        lines.append("")
+        lines.append("| machine | " + " | ".join(models) + " |")
+        lines.append("|---" * (len(models) + 1) + "|")
+        for fp in self.machines:
+            cells = [_pct(self.summary.get(fp, {}).get(m)) for m in models]
+            lines.append(f"| {fp} | " + " | ".join(cells) + " |")
+        lines.append("")
+        for fp in self.machines:
+            lines.append(f"## {fp}")
+            lines.append("")
+            noise = self.noise.get(fp)
+            if noise:
+                lines.append(
+                    f"wall-clock noise (held-out rows): "
+                    f"max rel std {noise['max_rel_std'] * 100:.2f}%, "
+                    f"median {noise['median_rel_std'] * 100:.2f}%")
+                lines.append("")
+            per_fit = self.per_variant[fp]
+            variants = sorted({v for errs in per_fit.values() for v in errs})
+            lines.append("| kernel variant | " + " | ".join(models) + " |")
+            lines.append("|---" * (len(models) + 1) + "|")
+            for v in variants:
+                cells = [_pct(per_fit.get(m, {}).get(v)) for m in models]
+                lines.append(f"| {v} | " + " | ".join(cells) + " |")
+            lines.append("")
+        return "\n".join(lines)
+
+
+def _pct(x: Optional[float]) -> str:
+    return "—" if x is None else f"{x * 100:.2f}%"
+
+
+def compare_profiles(profiles: Sequence[MachineProfile]) -> StudyReport:
+    """Build the cross-machine accuracy report from ≥ 2 study profiles.
+
+    Each machine may appear only once — two profiles with the same
+    fingerprint are ambiguous (which measurements represent the machine?)
+    and must be merged first (:func:`merge_any`).
+    """
+    profiles = list(profiles)
+    if len(profiles) < 2:
+        raise StudyError(
+            f"compare needs at least 2 profiles, got {len(profiles)}")
+    seen: Dict[str, int] = {}
+    for p in profiles:
+        seen[p.fingerprint.id] = seen.get(p.fingerprint.id, 0) + 1
+    dupes = sorted(fp for fp, n in seen.items() if n > 1)
+    if dupes:
+        raise StudyError(
+            f"machine(s) {dupes} appear more than once; merge "
+            f"same-machine profiles before comparing")
+    report = StudyReport(per_variant={})
+    for p in profiles:
+        fp = p.fingerprint.id
+        acc = profile_accuracy(p)
+        report.per_variant[fp] = acc
+        report.summary[fp] = {name: gmre_of(errs)
+                              for name, errs in acc.items()}
+        report.noise[fp] = _noise_summary(p.holdout)
+        report.params[fp] = {name: dict(mf.params)
+                             for name, mf in sorted(p.fits.items())}
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Fleet bundles: many machines in one artifact
+# ---------------------------------------------------------------------------
+
+
+def fleet_to_dict(profiles: Sequence[MachineProfile]) -> Dict[str, Any]:
+    return {
+        "fleet_schema_version": FLEET_SCHEMA_VERSION,
+        "profiles": {p.fingerprint.id: p.to_dict() for p in profiles},
+    }
+
+
+def load_profiles_any(path) -> List[MachineProfile]:
+    """Load either a single machine-profile JSON or a fleet bundle."""
+    path = Path(path)
+    try:
+        payload = json.loads(path.read_text())
+    except OSError as e:
+        raise StudyError(f"cannot read {path}: {e}") from e
+    except ValueError as e:
+        raise StudyError(f"{path} is not valid JSON ({e})") from e
+    if isinstance(payload, dict) and "profiles" in payload:
+        version = payload.get("fleet_schema_version")
+        if version != FLEET_SCHEMA_VERSION:
+            raise StudyError(
+                f"unsupported fleet schema version {version!r} in {path}")
+        try:
+            return [MachineProfile.from_dict(d)
+                    for d in dict(payload["profiles"]).values()]
+        except (ProfileError, TypeError, ValueError) as e:
+            raise StudyError(f"malformed fleet bundle {path}: {e}") from e
+    return [load_profile(path)]
+
+
+def merge_any(profiles: Sequence[MachineProfile], *,
+              allow_cross_machine: bool = False) -> List[MachineProfile]:
+    """Merge a collection of profiles.
+
+    Same-fingerprint profiles always merge fit-by-fit (conflicting fits
+    raise :class:`~repro.profiles.ProfileError`).  Distinct fingerprints
+    are only legal with ``allow_cross_machine`` (→ fleet bundle); without
+    it a mixed collection raises, because a single machine profile must
+    never mix measurements from different hardware.
+    """
+    by_fp: Dict[str, List[MachineProfile]] = {}
+    for p in profiles:
+        by_fp.setdefault(p.fingerprint.id, []).append(p)
+    if len(by_fp) > 1 and not allow_cross_machine:
+        raise ProfileError(
+            f"refusing to merge profiles from different machines "
+            f"{sorted(by_fp)} into one profile; pass --fleet to build a "
+            f"cross-machine fleet bundle instead")
+    return [group[0] if len(group) == 1 else merge_profiles(group)
+            for _, group in sorted(by_fp.items())]

@@ -1,0 +1,150 @@
+"""Synthetic ground-truth devices: fake machines with KNOWN ``p_*`` vectors.
+
+The paper's accuracy claims are benchmark anecdotes unless CI can check
+them; a real GPU's true parameters are unknowable, so nothing end-to-end
+can be asserted against hardware.  A :class:`SyntheticDevice` closes the
+loop instead: it has a designated *truth* model and a known parameter
+vector, and its injectable timer (the ``gather_feature_table`` seam)
+returns ``truth(features(kernel), p_true)`` plus seeded multiplicative
+noise.  An entire cross-machine study — gather, multi-fit, profile save,
+compare, merge — then runs on CPU in seconds, and tests assert that
+calibration *recovers the ground truth*:
+
+* noiseless: fitted rates match ``p_true`` to ~1e-4 relative (float32
+  LM; the residual at the truth is exactly zero),
+* with relative noise ``eps``: recovery within a few × ``eps`` (the tests
+  use rtol 5e-2 at 1 % noise).
+
+Smoothing shape parameters (``p_edge``) are excluded from recovery
+assertions — see :class:`repro.studies.zoo.ZooEntry.recoverable`.
+
+Determinism is load-bearing: the noise draw is a hash of (device name,
+kernel name, trials), not an RNG stream, so it is independent of gather
+order and identical across cold/warm-cache runs — the CLI's byte-identical
+profile guarantee holds for synthetic devices too.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Tuple
+
+from repro.core.model import Model
+from repro.core.uipick import MeasurementKernel, TimingStats, unit_hash
+from repro.profiles.fingerprint import DeviceFingerprint
+from repro.profiles.presets import DEFAULT_OUTPUT_FEATURE
+from repro.studies.zoo import OVL_FLOP_MEM, ZooEntry
+
+
+def _unit_hash(*parts: object) -> float:
+    """Deterministic uniform draw in [-1, 1) from the given identity
+    (the calibration subsystem's shared :func:`unit_hash`, recentered)."""
+    return unit_hash(*parts) * 2.0 - 1.0
+
+
+@dataclass(frozen=True)
+class SyntheticDevice:
+    """A fake machine whose timing law is a known model + known parameters.
+
+    ``noise`` is the relative (multiplicative) wall-clock noise scale: a
+    timing for kernel ``k`` is ``t_true · (1 + noise · u(k))`` with ``u``
+    a deterministic per-kernel draw in [-1, 1).
+    """
+
+    name: str
+    truth: ZooEntry = OVL_FLOP_MEM
+    p_true: Mapping[str, float] = field(default_factory=dict)
+    noise: float = 0.0
+    output_feature: str = DEFAULT_OUTPUT_FEATURE
+
+    def __post_init__(self):
+        model = self.truth.model(self.output_feature)
+        missing = [p for p in model.param_names if p not in self.p_true]
+        if missing:
+            raise ValueError(
+                f"synthetic device {self.name!r}: truth model "
+                f"{self.truth.name!r} needs values for {missing}")
+        if not 0.0 <= self.noise < 0.5:
+            raise ValueError(f"noise must be in [0, 0.5), got {self.noise}")
+
+    @property
+    def fingerprint(self) -> DeviceFingerprint:
+        """Identity of this fake machine.  The truth model and noise level
+        are PART of the identity: the measurement cache keys entries by
+        fingerprint, and a device generating timings from a different law
+        (or noise scale) is different hardware as far as cached
+        measurements are concerned."""
+        kind = f"SynthDev {self.name} {self.truth.name}"
+        if self.noise:
+            kind += f" noise{self.noise:g}"
+        return DeviceFingerprint(platform="synth", device_kind=kind,
+                                 n_devices=1)
+
+    def truth_model(self) -> Model:
+        return self.truth.model(self.output_feature)
+
+    def true_time(self, kernel: MeasurementKernel) -> float:
+        """Noise-free ground-truth wall time for ``kernel``."""
+        t = float(self.truth_model().evaluate(dict(self.p_true),
+                                              kernel.counts()))
+        if not t > 0.0:
+            raise ValueError(
+                f"synthetic device {self.name!r} produced nonpositive time "
+                f"{t!r} for kernel {kernel.name!r}; choose p_true so every "
+                f"kernel has positive cost (p_launch > 0 suffices)")
+        return t
+
+    def timer(self, kernel: MeasurementKernel, trials: int) -> TimingStats:
+        """Injectable timer: ground truth + seeded relative noise.
+
+        Usable directly as ``gather_feature_table(..., timer=device.timer)``.
+        """
+        t = self.true_time(kernel)
+        u = _unit_hash(self.name, kernel.name, trials)
+        median = t * (1.0 + self.noise * u)
+        return TimingStats(median=median, std=self.noise * t,
+                           min=t * (1.0 - self.noise))
+
+
+# ---------------------------------------------------------------------------
+# The default fleet: three machines spanning the balance regimes
+# ---------------------------------------------------------------------------
+
+# per-device true rates: (p_madd, p_mem, p_launch); p_edge is the shared
+# overlap sharpness.  The three machines span distinct rate balances, and
+# every rate is chosen to DOMINATE some battery rows on every device
+# (madd on large matmuls, mem on large streams, launch on empty kernels)
+# — the identifiability condition that makes closed-loop parameter
+# recovery a fair assertion even for the max-like overlap truth, where a
+# never-dominant term is unrecoverable by construction.
+_FLEET_RATES: Dict[str, Tuple[float, float, float]] = {
+    "apex": (5.0e-11, 4.0e-10, 3.0e-6),
+    "bulk": (1.0e-11, 6.0e-10, 8.0e-6),
+    "citra": (2.0e-11, 1.5e-10, 1.0e-6),
+}
+_P_EDGE_TRUE = 40.0
+
+
+def fleet_device(name: str, *, truth: ZooEntry = OVL_FLOP_MEM,
+                 noise: float = 0.0,
+                 output_feature: str = DEFAULT_OUTPUT_FEATURE
+                 ) -> SyntheticDevice:
+    """One named device of the default fleet, with any truth model form."""
+    if name not in _FLEET_RATES:
+        raise KeyError(f"unknown synthetic device {name!r}; "
+                       f"available: {sorted(_FLEET_RATES)}")
+    p_madd, p_mem, p_launch = _FLEET_RATES[name]
+    full = {"p_madd": p_madd, "p_mem": p_mem, "p_launch": p_launch,
+            "p_edge": _P_EDGE_TRUE}
+    params = {p: full[p]
+              for p in truth.model(output_feature).param_names if p in full}
+    return SyntheticDevice(name=name, truth=truth, p_true=params,
+                           noise=noise, output_feature=output_feature)
+
+
+def default_fleet(*, truth: ZooEntry = OVL_FLOP_MEM, noise: float = 0.0,
+                  output_feature: str = DEFAULT_OUTPUT_FEATURE
+                  ) -> List[SyntheticDevice]:
+    """The three-machine synthetic fleet used by tests, CI, and examples."""
+    return [fleet_device(n, truth=truth, noise=noise,
+                         output_feature=output_feature)
+            for n in sorted(_FLEET_RATES)]

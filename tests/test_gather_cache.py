@@ -4,12 +4,14 @@ Regression battery for the calibration-pipeline sweep: each kernel is timed
 exactly once per gather regardless of wall-time column count, warm cache
 runs perform zero timings, and the cache invalidates on fingerprint/trials
 changes."""
+import json
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core.uipick import CountingTimer, MeasurementKernel, \
-    gather_feature_table
+    TimingStats, gather_feature_table
 from repro.profiles import DeviceFingerprint, MeasurementCache
 from repro.profiles.cli import main as calibrate_main
 
@@ -156,6 +158,90 @@ def test_counts_only_entry_backfills_wall_time(tmp_path):
     gather_feature_table(FEATURES, _tiny_kernels(2), trials=20, timer=timer2,
                          cache=MeasurementCache(tmp_path, FP))
     assert timer2.calls == 0
+
+
+# ---------------------------------------------------------------------------
+# wall-time noise metadata (std/min alongside the median)
+# ---------------------------------------------------------------------------
+
+
+def _stats_timer():
+    return CountingTimer(
+        lambda k, trials: TimingStats(median=0.125, std=0.01, min=0.11))
+
+
+def test_noise_metadata_lands_in_table_and_cache(tmp_path):
+    cache = MeasurementCache(tmp_path, FP)
+    table = gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                                 timer=_stats_timer(), cache=cache)
+    assert set(table.row_noise) == set(table.row_names)
+    for d in table.row_noise.values():
+        assert d == {"median": 0.125, "std": 0.01, "min": 0.11}
+    # warm run reproduces the noise metadata from the cache, zero timings
+    warm = _stats_timer()
+    table2 = gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                                  timer=warm,
+                                  cache=MeasurementCache(tmp_path, FP))
+    assert warm.calls == 0
+    assert table2.row_noise == table.row_noise
+
+
+def test_float_returning_timers_still_work_without_noise():
+    table = gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                                 timer=_fake_timer())
+    assert table.row_noise == {}
+    assert list(table.values[:, 0]) == [0.125, 0.125]
+
+
+def test_old_schema_entry_without_noise_still_reads_as_hit(tmp_path):
+    """Entries written before noise metadata existed (no "noise" key) must
+    stay hits — a schema addition must never invalidate a warm cache."""
+    cache = MeasurementCache(tmp_path, FP)
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                         timer=_stats_timer(), cache=cache)
+    for path in tmp_path.glob("*.json"):
+        payload = json.loads(path.read_text())
+        payload.pop("noise")
+        path.write_text(json.dumps(payload))
+    timer = _stats_timer()
+    table = gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                                 timer=timer,
+                                 cache=MeasurementCache(tmp_path, FP))
+    assert timer.calls == 0                     # still fully warm
+    assert table.row_noise == {}                # no metadata → none surfaced
+    assert list(table.values[:, 0]) == [0.125, 0.125]
+
+
+def test_malformed_noise_metadata_never_blocks_a_hit(tmp_path):
+    cache = MeasurementCache(tmp_path, FP)
+    gather_feature_table(FEATURES, _tiny_kernels(1), trials=4,
+                         timer=_stats_timer(), cache=cache)
+    (entry,) = tmp_path.glob("*.json")
+    payload = json.loads(entry.read_text())
+    payload["noise"] = {"median": "not-a-number"}
+    entry.write_text(json.dumps(payload))
+    timer = _stats_timer()
+    gather_feature_table(FEATURES, _tiny_kernels(1), trials=4, timer=timer,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer.calls == 0
+
+
+def test_time_stats_reports_spread():
+    (k,) = _tiny_kernels(1)
+    stats = k.time_stats(trials=5, warmup=1)
+    assert stats.median > 0
+    assert stats.std is not None and stats.std >= 0
+    assert stats.min is not None and 0 < stats.min <= stats.median
+    assert k.time(trials=3) > 0                 # median shortcut unchanged
+
+
+def test_timing_stats_coerce():
+    s = TimingStats.coerce(0.5)
+    assert s == TimingStats(median=0.5)
+    assert TimingStats.coerce(s) is s
+    assert s.to_dict() == {"median": 0.5}
+    full = TimingStats(median=1.0, std=0.1, min=0.9)
+    assert full.to_dict() == {"median": 1.0, "std": 0.1, "min": 0.9}
 
 
 # ---------------------------------------------------------------------------

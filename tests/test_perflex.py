@@ -301,6 +301,156 @@ def test_nonpositive_output_raises_named_valueerror():
                            for i, r in enumerate(rows)])
 
 
+# ---------------------------------------------------------------------------
+# expression-parser properties: round trip, rejection, batched ≡ row-wise
+# ---------------------------------------------------------------------------
+
+
+def _random_expr(rng, depth=0):
+    """Random well-formed model expression from the allowed grammar.
+
+    Returns ``(expr_str, ref_eval)`` where ``ref_eval(env)`` is an
+    independent float64 evaluator built alongside the string — the parser
+    round-trip oracle.  Only bounded functions (tanh, sqrt∘abs) appear, so
+    values stay finite in float32 and comparisons are meaningful.
+    """
+    r = rng.rand()
+    if depth >= 3 or r < 0.35:
+        k = rng.randint(3)
+        if k == 0:
+            n = f"p_{'abc'[rng.randint(3)]}"
+            return n, (lambda env, n=n: env[n])
+        if k == 1:
+            n = f"f_{'xyz'[rng.randint(3)]}"
+            return n, (lambda env, n=n: env[n])
+        c = round(float(rng.uniform(0.5, 2.0)), 4)
+        return repr(c), (lambda env, c=c: c)
+    if r < 0.80:
+        op = "+-*"[rng.randint(3)]
+        a_s, a_f = _random_expr(rng, depth + 1)
+        b_s, b_f = _random_expr(rng, depth + 1)
+        fn = {"+": lambda x, y: x + y, "-": lambda x, y: x - y,
+              "*": lambda x, y: x * y}[op]
+        return f"({a_s} {op} {b_s})", \
+            (lambda env, a=a_f, b=b_f, fn=fn: fn(a(env), b(env)))
+    if r < 0.90:
+        a_s, a_f = _random_expr(rng, depth + 1)
+        return f"(-{a_s})", (lambda env, a=a_f: -a(env))
+    if r < 0.95:
+        a_s, a_f = _random_expr(rng, depth + 1)
+        return f"tanh({a_s})", (lambda env, a=a_f: float(np.tanh(a(env))))
+    a_s, a_f = _random_expr(rng, depth + 1)
+    return f"sqrt(abs({a_s}))", \
+        (lambda env, a=a_f: float(np.sqrt(np.abs(a(env)))))
+
+
+@hypothesis.given(st.integers(0, 2 ** 31 - 1))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_parser_roundtrip_of_generated_expressions(seed):
+    """Any expression from the allowed grammar parses; discovered names
+    match the generator's leaves; evaluation matches an independently
+    built reference evaluator."""
+    import ast
+
+    rng = np.random.RandomState(seed)
+    expr, ref = _random_expr(rng)
+    m = Model("f_wall_time_x", expr)
+    assert m.expr == expr
+    names = {n.id for n in ast.walk(ast.parse(expr, mode="eval"))
+             if isinstance(n, ast.Name)} - {"tanh", "sqrt", "abs"}
+    assert set(m.param_names) == {n for n in names if n.startswith("p_")}
+    assert set(m.feature_names) == {n for n in names if n.startswith("f_")}
+    assert m.signature() == Model("f_wall_time_x", expr).signature()
+
+    env = {f"p_{c}": 0.5 + 0.25 * i for i, c in enumerate("abc")}
+    feats = {f"f_{c}": 0.75 + 0.5 * i for i, c in enumerate("xyz")}
+    got = float(m.evaluate(env, feats))
+    want = ref({**env, **feats})
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+# every disallowed AST node class that can appear in an eval-mode parse,
+# with an expression exercising it
+_DISALLOWED = [
+    ("p_a < f_x", "Compare"),
+    ("p_a and f_x", "BoolOp"),
+    ("p_a if f_x else p_b", "IfExp"),
+    ("p_a[0]", "Subscript"),
+    ("p_a[0:1]", "Slice"),
+    ("p_a.real", "Attribute"),
+    ("lambda: p_a", "Lambda"),
+    ("{}", "Dict"),
+    ("{p_a}", "Set"),
+    ("[p_a]", "List"),
+    ("[p_a for p_a in f_x]", "ListComp"),
+    ("{p_a for p_a in f_x}", "SetComp"),
+    ("{p_a: p_a for p_a in f_x}", "DictComp"),
+    ("(p_a for p_a in f_x)", "GeneratorExp"),
+    ("(p_a, *f_x)", "Starred"),
+    ("(p_a := 1.0)", "NamedExpr"),
+    ("p_a % f_x", "Mod"),
+    ("p_a // f_x", "FloorDiv"),
+    ("p_a @ f_x", "MatMult"),
+    ("p_a | f_x", "BitOr"),
+    ("p_a & f_x", "BitAnd"),
+    ("p_a ^ f_x", "BitXor"),
+    ("p_a << f_x", "LShift"),
+    ("p_a >> f_x", "RShift"),
+    ("~p_a", "Invert"),
+    ("not p_a", "Not"),
+    ("f''", "JoinedStr"),
+]
+
+
+@pytest.mark.parametrize("expr,node_name", _DISALLOWED,
+                         ids=[n for _, n in _DISALLOWED])
+def test_parser_rejects_every_disallowed_node_class(expr, node_name):
+    import ast
+
+    node_cls = getattr(ast, node_name)
+    from repro.core.model import _ALLOWED_NODES
+    assert not issubclass(node_cls, _ALLOWED_NODES)
+    # the expression really exercises that node class...
+    tree = ast.parse(expr, mode="eval")
+    assert any(isinstance(n, node_cls) for n in ast.walk(tree)), node_name
+    # ...and the model parser refuses it
+    with pytest.raises(ValueError):
+        Model("f_t", expr)
+
+
+def test_parser_rejects_unknown_functions_and_non_name_calls():
+    with pytest.raises(ValueError, match="unknown function"):
+        Model("f_t", "nosuchfn(p_a)")
+    with pytest.raises(ValueError):
+        Model("f_t", "(p_a)(f_x)")
+
+
+@hypothesis.given(st.integers(0, 2 ** 31 - 1), st.integers(1, 12))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_batched_eval_equals_rowwise_on_random_tables(seed, n_rows):
+    """batched_eval over a random feature table ≡ row-by-row evaluate, for
+    random grammar-generated models."""
+    from repro.core.model import FeatureTable
+
+    rng = np.random.RandomState(seed)
+    expr, _ = _random_expr(rng)
+    m = Model("f_wall_time_x", expr)
+    params = {n: float(rng.uniform(0.1, 3.0)) for n in m.param_names}
+    rows = [{n: float(rng.uniform(0.1, 3.0)) for n in m.feature_names}
+            for _ in range(n_rows)]
+    table = FeatureTable.from_rows(rows)
+
+    if m.feature_names:
+        F = np.stack([table.column(n) for n in m.feature_names], axis=1)
+    else:
+        F = np.zeros((n_rows, 0))
+    p_vec = jnp.asarray([params[n] for n in m.param_names], jnp.float32)
+    batched = np.asarray(m.batched_eval(p_vec, jnp.asarray(F, jnp.float32)))
+    rowwise = np.asarray([float(m.evaluate(params, r)) for r in rows])
+    assert batched.shape == (n_rows,)
+    np.testing.assert_allclose(batched, rowwise, rtol=1e-5, atol=1e-7)
+
+
 def test_singular_system_recovers_via_damping():
     """A rank-deficient Jacobian (duplicated feature column) must not blow
     up: non-finite solves bump damping inside the trace and the fit still

@@ -1,0 +1,337 @@
+"""CLI + artifact tests for the cross-machine study subsystem:
+`compare`/`merge`/`gc` subcommands, fleet bundles, profile merge rules,
+and the `--zoo --synthetic` study path (the CI smoke, in-process)."""
+import json
+
+import pytest
+
+from repro.profiles import (
+    DeviceFingerprint,
+    MachineProfile,
+    MeasurementCache,
+    ProfileError,
+    load_profile,
+    merge_profiles,
+    save_profile,
+)
+from repro.profiles.cli import main as cli_main
+from repro.studies import (
+    STUDY_SMOKE_TAGS,
+    fleet_to_dict,
+    load_profiles_any,
+    merge_any,
+    run_study,
+)
+from repro.testing.synthdev import fleet_device
+
+NOISE = 0.02
+
+
+def _study_profile(name, **kw):
+    device = fleet_device(name, noise=NOISE)
+    return device, run_study(fingerprint=device.fingerprint,
+                             timer=device.timer, tags=STUDY_SMOKE_TAGS,
+                             trials=3, **kw)
+
+
+# ---------------------------------------------------------------------------
+# merge semantics (API)
+# ---------------------------------------------------------------------------
+
+
+def test_merge_same_machine_unions_fits():
+    device = fleet_device("apex", noise=NOISE)
+    from repro.studies import LIN_FLOP, LIN_FLOP_MEM
+    a = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=STUDY_SMOKE_TAGS, trials=3, entries=[LIN_FLOP])
+    b = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=STUDY_SMOKE_TAGS, trials=3, entries=[LIN_FLOP_MEM])
+    merged = merge_profiles([a, b])
+    assert sorted(merged.fits) == ["lin_flop", "lin_flop_mem"]
+    assert merged.fits["lin_flop"].params == a.fits["lin_flop"].params
+    assert merged.fingerprint == device.fingerprint
+    assert merged.holdout is not None
+
+
+def test_merge_identical_fits_are_not_conflicts():
+    _, p = _study_profile("citra")
+    merged = merge_profiles([p, p])
+    assert sorted(merged.fits) == sorted(p.fits)
+
+
+def test_merge_conflicting_fit_payload_raises():
+    device = fleet_device("apex", noise=NOISE)
+    a = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=STUDY_SMOKE_TAGS, trials=3)
+    b = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=STUDY_SMOKE_TAGS, trials=4)   # new noise draws
+    assert a.fits["lin_flop"].params != b.fits["lin_flop"].params
+    with pytest.raises(ProfileError, match="conflicting fit"):
+        merge_profiles([a, b])
+
+
+def test_merge_cross_machine_requires_fleet():
+    _, a = _study_profile("apex")
+    _, b = _study_profile("bulk")
+    with pytest.raises(ProfileError, match="different machines"):
+        merge_any([a, b])
+    merged = merge_any([a, b], allow_cross_machine=True)
+    assert len(merged) == 2
+
+
+def test_fleet_bundle_roundtrip(tmp_path):
+    from repro.checkpoint.manager import atomic_write_json
+    _, a = _study_profile("apex")
+    _, b = _study_profile("bulk")
+    path = tmp_path / "fleet.json"
+    atomic_write_json(path, fleet_to_dict([a, b]))
+    loaded = load_profiles_any(path)
+    assert sorted(p.fingerprint.id for p in loaded) \
+        == sorted([a.fingerprint.id, b.fingerprint.id])
+    for orig in (a, b):
+        (match,) = [p for p in loaded
+                    if p.fingerprint == orig.fingerprint]
+        for name in orig.fits:
+            assert match.fits[name].params == orig.fits[name].params
+    # a single-profile JSON loads through the same front door
+    save_profile(a, tmp_path / "one.json")
+    (single,) = load_profiles_any(tmp_path / "one.json")
+    assert single.fingerprint == a.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# CLI flows (the CI smoke, in-process)
+# ---------------------------------------------------------------------------
+
+
+def _zoo_args(dev, out, cache_dir, extra=()):
+    return ["--smoke", "--zoo", "--synthetic", dev,
+            "--synthetic-noise", str(NOISE), "--trials", "2",
+            "--cache-dir", str(cache_dir), "--out", str(out), *extra]
+
+
+def test_cli_two_device_study_compare_merge_happy_path(tmp_path):
+    cache = tmp_path / "mc"
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    assert cli_main(_zoo_args("apex", a, cache)) == 0
+    assert cli_main(_zoo_args("bulk", b, cache)) == 0
+
+    report_md = tmp_path / "report.md"
+    report_json = tmp_path / "report.json"
+    assert cli_main(["compare", str(a), str(b),
+                     "--report", str(report_md),
+                     "--json", str(report_json)]) == 0
+    md = report_md.read_text()
+    assert "Cross-machine accuracy report" in md
+    assert "ovl_flop_mem" in md and "lin_flop" in md
+    payload = json.loads(report_json.read_text())
+    assert len(payload["machines"]) == 2
+    assert sorted(payload["models"]) \
+        == ["lin_flop", "lin_flop_mem", "ovl_flop_mem"]
+    # every machine has a per-variant error for every model
+    for fp in payload["machines"]:
+        for m in payload["models"]:
+            assert payload["per_variant"][fp][m]
+            assert payload["summary"][fp][m] >= 0
+
+    fleet = tmp_path / "fleet.json"
+    assert cli_main(["merge", str(a), str(b), "--fleet",
+                     "--out", str(fleet)]) == 0
+    assert len(load_profiles_any(fleet)) == 2
+    # comparing straight from the bundle works too
+    assert cli_main(["compare", str(fleet),
+                     "--report", str(tmp_path / "r2.md")]) == 0
+
+
+def test_cli_warm_zoo_study_zero_timings_byte_identical(tmp_path):
+    cache = tmp_path / "mc"
+    a, a2 = tmp_path / "a.json", tmp_path / "a2.json"
+    assert cli_main(_zoo_args("citra", a, cache)) == 0
+    assert cli_main(_zoo_args("citra", a2, cache,
+                              ["--expect-zero-timings"])) == 0
+    assert a.read_text() == a2.read_text()
+
+
+def test_cli_merge_mismatched_fingerprints_exits_nonzero(tmp_path):
+    cache = tmp_path / "mc"
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    assert cli_main(_zoo_args("apex", a, cache)) == 0
+    assert cli_main(_zoo_args("bulk", b, cache)) == 0
+    assert cli_main(["merge", str(a), str(b),
+                     "--out", str(tmp_path / "nope.json")]) == 3
+    assert not (tmp_path / "nope.json").exists()
+    # duplicate machine in compare is the same class of error
+    assert cli_main(["compare", str(a), str(a),
+                     "--report", str(tmp_path / "r.md")]) == 3
+
+
+def test_cli_merge_same_machine_profile(tmp_path):
+    device = fleet_device("apex", noise=NOISE)
+    from repro.studies import LIN_FLOP, LIN_FLOP_MEM
+    a = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=STUDY_SMOKE_TAGS, trials=3, entries=[LIN_FLOP])
+    b = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=STUDY_SMOKE_TAGS, trials=3, entries=[LIN_FLOP_MEM])
+    pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+    save_profile(a, pa)
+    save_profile(b, pb)
+    out = tmp_path / "merged.json"
+    assert cli_main(["merge", str(pa), str(pb), "--out", str(out)]) == 0
+    assert sorted(load_profile(out).fits) == ["lin_flop", "lin_flop_mem"]
+
+
+def test_cli_unknown_synthetic_device_is_an_error(tmp_path):
+    assert cli_main(["--zoo", "--synthetic", "warp9",
+                     "--out", str(tmp_path / "p.json")]) == 2
+
+
+def test_cli_legacy_single_fit_interface_unchanged(tmp_path):
+    """The original flag-style invocation (no subcommand) must keep
+    working for real-device calibration scripts."""
+    out = tmp_path / "p.json"
+    rc = cli_main(["--tags", "empty_kernel", "nelements:16,1024",
+                   "--match", "intersect",
+                   "--expr", "p_launch * f_sync_launch_kernel",
+                   "--trials", "2", "--out", str(out)])
+    assert rc == 0
+    prof = load_profile(out)
+    assert "base" in prof.fits and prof.holdout is None
+
+
+# ---------------------------------------------------------------------------
+# gc subcommand + cache eviction
+# ---------------------------------------------------------------------------
+
+
+FP = DeviceFingerprint(platform="cpu", device_kind="Test CPU", n_devices=1)
+OTHER = DeviceFingerprint(platform="cpu", device_kind="Other", n_devices=2)
+
+
+def _tiny_kernels(n=3):
+    import jax.numpy as jnp
+
+    from repro.core.uipick import MeasurementKernel
+    kernels = []
+    for i in range(n):
+        size = 8 * (i + 1)
+
+        def make_args(s=size):
+            return (jnp.ones((s,), jnp.float32),)
+
+        kernels.append(MeasurementKernel(
+            name=f"tiny_{size}", fn=lambda x: x * 2.0 + 1.0,
+            make_args=make_args, tags={"n": size}, sizes={"n": size}))
+    return kernels
+
+
+def _populate(tmp_path, fp, n=2):
+    from repro.core.uipick import CountingTimer, gather_feature_table
+    cache = MeasurementCache(tmp_path, fp)
+    gather_feature_table(["f_wall_time_x", "f_op_float32_mul"],
+                         _tiny_kernels(n), trials=4,
+                         timer=CountingTimer(lambda k, t: 0.125),
+                         cache=cache)
+    return cache
+
+
+def test_gc_drops_foreign_keeps_own_and_warm_gather_unchanged(tmp_path):
+    from repro.core.uipick import CountingTimer, gather_feature_table
+    _populate(tmp_path, FP, n=3)
+    _populate(tmp_path, OTHER, n=2)
+    cache = MeasurementCache(tmp_path, FP)
+    stats = cache.gc()
+    assert stats.kept == 3 and stats.dropped_foreign == 2
+    assert stats.dropped == 2
+    # warm-gather behavior is unchanged after GC of foreign entries
+    timer = CountingTimer(lambda k, t: 0.125)
+    gather_feature_table(["f_wall_time_x", "f_op_float32_mul"],
+                         _tiny_kernels(3), trials=4, timer=timer,
+                         cache=MeasurementCache(tmp_path, FP))
+    assert timer.calls == 0
+
+
+def test_gc_max_age_drops_old_entries(tmp_path):
+    import os
+    import time
+    _populate(tmp_path, FP, n=2)
+    victim = sorted(tmp_path.glob("*.json"))[0]
+    old = time.time() - 3600
+    os.utime(victim, (old, old))
+    stats = MeasurementCache(tmp_path, FP).gc(max_age=600)
+    assert stats.dropped_old == 1 and stats.kept == 1
+
+
+def test_gc_drops_corrupt_entries_but_never_foreign_files(tmp_path):
+    """Torn ENTRIES (hash-named) are evicted; files the cache does not own
+    (a user's profile saved next to the cache) are never touched."""
+    _populate(tmp_path, FP, n=2)
+    victim = sorted(p for p in tmp_path.glob("*.json"))[0]
+    victim.write_text("{ torn")
+    stray = tmp_path / "machine_profile.json"
+    stray.write_text('{"valid": "json"}')
+    stats = MeasurementCache(tmp_path, FP).gc()
+    assert stats.dropped_corrupt == 1 and stats.kept == 1
+    assert stray.exists()
+
+
+def test_gc_drops_stale_schema_entries(tmp_path):
+    """Entries written under an older CACHE_SCHEMA_VERSION can never hit
+    again (the embedded key mismatches every request) — gc must evict
+    them instead of counting them as kept forever."""
+    _populate(tmp_path, FP, n=2)
+    victim = sorted(tmp_path.glob("*.json"))[0]
+    payload = json.loads(victim.read_text())
+    payload["key"]["schema"] = -1
+    victim.write_text(json.dumps(payload))
+    stats = MeasurementCache(tmp_path, FP).gc()
+    assert stats.dropped_schema == 1 and stats.kept == 1
+    assert stats.dropped == 1
+
+
+def test_merge_unions_holdout_columns_and_rejects_conflicts():
+    """Same-battery studies with different zoo subsets merge their holdout
+    tables column-wise; disagreeing row sets or values are conflicts."""
+    from repro.core.model import FeatureTable
+    import numpy as np
+
+    device = fleet_device("apex", noise=NOISE)
+    from repro.studies import LIN_FLOP, LIN_FLOP_MEM
+    a = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=STUDY_SMOKE_TAGS, trials=3, entries=[LIN_FLOP])
+    b = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=STUDY_SMOKE_TAGS, trials=3, entries=[LIN_FLOP_MEM])
+    merged = merge_profiles([a, b])
+    assert merged.holdout.row_names == a.holdout.row_names
+    assert set(merged.holdout.feature_ids) \
+        == set(a.holdout.feature_ids) | set(b.holdout.feature_ids)
+
+    # disagreeing rows (different battery) → conflict
+    c = MachineProfile(
+        fingerprint=device.fingerprint, fits=dict(b.fits),
+        holdout=FeatureTable(list(b.holdout.feature_ids),
+                             b.holdout.values[:1], ["other_kernel"]))
+    with pytest.raises(ProfileError, match="held-out splits"):
+        merge_profiles([a, c])
+
+    # disagreeing values for a shared column → conflict
+    tampered_vals = np.array(a.holdout.values)
+    tampered_vals[0, 0] *= 2.0
+    d = MachineProfile(
+        fingerprint=device.fingerprint, fits={},
+        holdout=FeatureTable(list(a.holdout.feature_ids), tampered_vals,
+                             list(a.holdout.row_names)))
+    with pytest.raises(ProfileError, match="held-out measurements"):
+        merge_profiles([a, d])
+
+
+def test_gc_on_missing_dir_is_a_noop(tmp_path):
+    stats = MeasurementCache(tmp_path / "nope", FP).gc()
+    assert stats.kept == 0 and stats.dropped == 0
+
+
+def test_gc_cli(tmp_path):
+    local = DeviceFingerprint.local()
+    _populate(tmp_path, local, n=2)
+    _populate(tmp_path, OTHER, n=1)
+    assert cli_main(["gc", "--cache-dir", str(tmp_path)]) == 0
+    assert len(MeasurementCache(tmp_path, local)) == 2

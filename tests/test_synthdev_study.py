@@ -1,0 +1,229 @@
+"""Closed-loop cross-machine study on the synthetic ground-truth fleet.
+
+The accuracy claims the paper makes from benchmark tables become
+assertions here: calibration against devices with KNOWN parameters must
+recover those parameters, and the zoo's scope ladder must show the
+paper's accuracy ordering on held-out kernel variants.
+
+Documented tolerances (see repro/testing/synthdev.py):
+  * noiseless recovery: rtol ≤ 1e-5 (float32 LM; observed ~1e-7)
+  * 2 % relative timing noise: rtol ≤ 5e-2 (observed ~1e-2)
+"""
+import numpy as np
+import pytest
+
+from repro.core.model import FeatureTable
+from repro.core.uipick import CountingTimer, holdout_split
+from repro.profiles import load_profile, save_profile
+from repro.studies import (
+    MODEL_ZOO,
+    STUDY_SMOKE_TAGS,
+    STUDY_TAGS,
+    StudyError,
+    compare_profiles,
+    profile_accuracy,
+    run_study,
+)
+from repro.testing.synthdev import SyntheticDevice, default_fleet, fleet_device
+
+NOISELESS_RTOL = 1e-5
+NOISY_RTOL = 5e-2
+NOISE = 0.02
+
+
+def _recovery_errors(profile, device, entry):
+    mf = profile.fits[entry.name]
+    return {p: abs(mf.params[p] - device.p_true[p]) / device.p_true[p]
+            for p in entry.recoverable}
+
+
+@pytest.mark.parametrize("entry", MODEL_ZOO, ids=lambda e: e.name)
+def test_noiseless_recovery_all_devices(entry):
+    """3 devices × every zoo model as truth: fitting the matching model
+    form on noise-free synthetic timings recovers p_true almost exactly."""
+    for device in default_fleet(truth=entry, noise=0.0):
+        profile = run_study(fingerprint=device.fingerprint,
+                            timer=device.timer, tags=STUDY_SMOKE_TAGS,
+                            trials=3)
+        errs = _recovery_errors(profile, device, entry)
+        assert max(errs.values()) <= NOISELESS_RTOL, (device.name, errs)
+
+
+def test_noisy_recovery_and_accuracy_ordering():
+    """The paper's §8 shape end to end: 3 noisy devices, 3 zoo models
+    fitted from one battery each; the matched (nonlinear-truth) model
+    recovers ground truth within NOISY_RTOL and its held-out error is no
+    worse than either linear model's on every machine."""
+    profiles = []
+    for device in default_fleet(noise=NOISE):
+        profile = run_study(fingerprint=device.fingerprint,
+                            timer=device.timer, tags=STUDY_TAGS, trials=3)
+        errs = _recovery_errors(profile, device, device.truth)
+        assert max(errs.values()) <= NOISY_RTOL, (device.name, errs)
+        profiles.append(profile)
+
+    report = compare_profiles(profiles)
+    assert len(report.machines) == 3
+    for fp in report.machines:
+        s = report.summary[fp]
+        assert s["ovl_flop_mem"] <= s["lin_flop"] * (1 + 1e-6), (fp, s)
+        assert s["ovl_flop_mem"] <= s["lin_flop_mem"] * (1 + 1e-6), (fp, s)
+
+
+def test_study_from_cached_synthetic_timings(tmp_path):
+    """A second study over a warm cache performs ZERO timings and produces
+    a byte-identical profile (synthetic determinism is order-independent)."""
+    from repro.profiles import MeasurementCache
+
+    device = fleet_device("citra", noise=NOISE)
+    cold = CountingTimer(device.timer)
+    p1 = run_study(fingerprint=device.fingerprint, timer=cold,
+                   cache=MeasurementCache(tmp_path, device.fingerprint),
+                   tags=STUDY_SMOKE_TAGS, trials=3)
+    assert cold.calls == len(p1.kernel_names) > 0
+
+    warm = CountingTimer(device.timer)
+    p2 = run_study(fingerprint=device.fingerprint, timer=warm,
+                   cache=MeasurementCache(tmp_path, device.fingerprint),
+                   tags=STUDY_SMOKE_TAGS, trials=3)
+    assert warm.calls == 0
+    save_profile(p1, tmp_path / "a.json")
+    save_profile(p2, tmp_path / "b.json")
+    assert (tmp_path / "a.json").read_text() \
+        == (tmp_path / "b.json").read_text()
+
+
+def test_profile_roundtrip_preserves_study_artifacts(tmp_path):
+    """Holdout table (values, row names, noise metadata) and every zoo fit
+    survive the JSON round trip bit-exactly."""
+    device = fleet_device("apex", noise=NOISE)
+    profile = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                        tags=STUDY_SMOKE_TAGS, trials=3)
+    path = save_profile(profile, tmp_path / "prof.json")
+    loaded = load_profile(path, expected_fingerprint=device.fingerprint)
+    assert sorted(loaded.fits) == sorted(e.name for e in MODEL_ZOO)
+    for name in profile.fits:
+        assert loaded.fits[name].params == profile.fits[name].params
+    assert loaded.holdout is not None
+    np.testing.assert_array_equal(loaded.holdout.values,
+                                  profile.holdout.values)
+    assert loaded.holdout.row_names == profile.holdout.row_names
+    assert loaded.holdout.row_noise == profile.holdout.row_noise
+    # and the loaded profile still yields the identical accuracy table
+    assert profile_accuracy(loaded) == profile_accuracy(profile)
+
+
+def test_synthetic_timer_is_deterministic_and_positive():
+    device = fleet_device("bulk", noise=0.1)
+    from repro.core.uipick import ALL_GENERATORS, KernelCollection, \
+        MatchCondition
+    kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
+        STUDY_SMOKE_TAGS, generator_match_cond=MatchCondition.INTERSECT)
+    for k in kernels:
+        s1 = device.timer(k, 3)
+        s2 = device.timer(k, 3)
+        assert s1 == s2
+        assert s1.median > 0 and s1.min > 0
+        assert s1.std == pytest.approx(0.1 * device.true_time(k))
+        # a different trials count is a different measurement → new draw
+        assert device.timer(k, 4).median != s1.median
+
+
+def test_synthetic_fingerprint_distinguishes_truth_and_noise():
+    base = fleet_device("apex")
+    assert fleet_device("apex", noise=0.02).fingerprint != base.fingerprint
+    from repro.studies import LIN_FLOP
+    assert fleet_device("apex", truth=LIN_FLOP).fingerprint \
+        != base.fingerprint
+    assert base.fingerprint.platform == "synth"
+
+
+def test_synthetic_device_validates_inputs():
+    from repro.studies import OVL_FLOP_MEM
+    with pytest.raises(KeyError, match="unknown synthetic device"):
+        fleet_device("nope")
+    with pytest.raises(ValueError, match="needs values"):
+        SyntheticDevice(name="x", truth=OVL_FLOP_MEM,
+                        p_true={"p_madd": 1e-11})
+    with pytest.raises(ValueError, match="noise"):
+        fleet_device("apex", noise=0.9)
+
+
+def test_holdout_split_is_deterministic_and_disjoint():
+    names = [f"kernel_{i}" for i in range(16)]
+    table = FeatureTable(["f_x"], np.arange(16.0).reshape(16, 1), names)
+    train1, hold1 = holdout_split(table, holdout_fraction=0.25)
+    train2, hold2 = holdout_split(table, holdout_fraction=0.25)
+    assert train1.row_names == train2.row_names
+    assert hold1.row_names == hold2.row_names
+    assert len(hold1) == 4                       # exact fraction
+    assert set(train1.row_names) | set(hold1.row_names) == set(names)
+    assert not set(train1.row_names) & set(hold1.row_names)
+    # row order and values preserved through select
+    for t in (train1, hold1):
+        for i, n in enumerate(t.row_names):
+            assert t.values[i, 0] == float(n.split("_")[1])
+    # a different salt yields a different (but still deterministic) split
+    _, hold_salt = holdout_split(table, holdout_fraction=0.25, salt="other")
+    assert hold_salt.row_names != hold1.row_names
+
+
+def test_holdout_split_bounds():
+    table = FeatureTable(["f_x"], np.zeros((2, 1)), ["a", "b"])
+    train, hold = holdout_split(table, holdout_fraction=0.0)
+    assert len(hold) == 1 and len(train) == 1     # both sides non-empty
+    train, hold = holdout_split(table, holdout_fraction=1.0)
+    assert len(hold) == 1 and len(train) == 1
+    with pytest.raises(ValueError, match="cannot split"):
+        holdout_split(FeatureTable(["f_x"], np.zeros((1, 1)), ["a"]))
+
+
+def test_run_study_validates_holdout_fraction():
+    device = fleet_device("apex")
+    for bad in (0.0, 1.0, -0.1, 1.5):
+        with pytest.raises(StudyError, match="holdout_fraction"):
+            run_study(fingerprint=device.fingerprint, timer=device.timer,
+                      tags=STUDY_SMOKE_TAGS, trials=3,
+                      holdout_fraction=bad)
+
+
+def test_relative_errors_rejects_missing_feature_columns():
+    """A fit whose features were never gathered must error, not be scored
+    against silently-zero columns (fabricated accuracy)."""
+    from repro.core.calibrate import relative_errors
+    from repro.core.model import Model
+
+    table = FeatureTable(["f_wall_time_x", "f_a"],
+                         np.asarray([[1.0, 2.0], [2.0, 3.0]]), ["k0", "k1"])
+    model = Model("f_wall_time_x", "p_u * f_a + p_v * f_missing")
+    with pytest.raises(ValueError, match="f_missing"):
+        relative_errors(model, {"p_u": 1.0, "p_v": 1.0}, table)
+    # a missing OUTPUT column is a missing-column error too, not a
+    # misleading "output is zero" complaint
+    other = Model("f_wall_time_other", "p_u * f_a")
+    with pytest.raises(ValueError, match="lacks columns.*f_wall_time_other"):
+        relative_errors(other, {"p_u": 1.0}, table)
+
+
+def test_run_study_rejects_underdetermined_battery():
+    """A battery whose train split has fewer rows than the widest model
+    has parameters must error instead of persisting arbitrary fits."""
+    device = fleet_device("apex")
+    with pytest.raises(StudyError, match="underdetermined|widest zoo"):
+        run_study(fingerprint=device.fingerprint, timer=device.timer,
+                  tags=["empty_kernel", "nelements:16,1024"], trials=3)
+
+
+def test_compare_rejects_duplicate_machine_and_missing_holdout():
+    device = fleet_device("apex", noise=NOISE)
+    profile = run_study(fingerprint=device.fingerprint, timer=device.timer,
+                        tags=STUDY_SMOKE_TAGS, trials=3)
+    with pytest.raises(StudyError, match="more than once"):
+        compare_profiles([profile, profile])
+    with pytest.raises(StudyError, match="at least 2"):
+        compare_profiles([profile])
+    from repro.profiles import MachineProfile
+    bare = MachineProfile(fingerprint=fleet_device("bulk").fingerprint,
+                          fits=dict(profile.fits))
+    with pytest.raises(StudyError, match="no held-out"):
+        compare_profiles([profile, bare])
