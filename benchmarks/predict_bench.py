@@ -1,0 +1,88 @@
+"""Prediction-serving benchmark: single vs batched ``PerfSession`` calls.
+
+The facade's throughput claim is that prediction cost scales with batch
+size, not Python dispatch: ``predict_batch`` packs every kernel into one
+dense feature matrix and runs ONE jit-compiled breakdown evaluation,
+while a loop of single ``predict`` calls pays per-call dispatch and
+assembly.  This bench pins that claim as numbers: µs per kernel for both
+paths (counting amortized out — counts are memoized on the kernels, as
+in any warm serving process) and the batched-over-single speedup.
+
+Rows follow the suite convention ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.api import PerfSession
+from repro.core.calibrate import FitResult
+from repro.core.model import Model
+from repro.core.uipick import MeasurementKernel
+from repro.profiles import DeviceFingerprint, MachineProfile, ModelFit
+from repro.studies.zoo import OVL_FLOP_MEM
+
+N_KERNELS = 256
+REPEATS = 5
+
+
+def _profile() -> MachineProfile:
+    """A ready-made profile (synthetic fit — the bench measures the
+    serving path, not calibration)."""
+    model = OVL_FLOP_MEM.model()
+    fit = FitResult(params={"p_madd": 5e-11, "p_mem": 4e-10,
+                            "p_launch": 3e-6, "p_edge": 40.0},
+                    residual_norm=0.0, iterations=1, converged=True)
+    return MachineProfile(
+        fingerprint=DeviceFingerprint(platform="synth",
+                                      device_kind="predict-bench",
+                                      n_devices=1),
+        fits={OVL_FLOP_MEM.name: ModelFit.from_fit(model, fit)},
+        trials=3)
+
+
+def _kernels(n: int) -> List[MeasurementKernel]:
+    kernels = []
+    for i in range(n):
+        size = 8 * (i + 1)
+
+        def make_args(s=size):
+            return (jnp.ones((s,), jnp.float32),)
+
+        kernels.append(MeasurementKernel(
+            name=f"bench_{size}", fn=lambda x: x * 2.0 + 1.0,
+            make_args=make_args, tags={"n": size}, sizes={"n": size}))
+    return kernels
+
+
+def predict_rows() -> List[str]:
+    session = PerfSession.open(_profile())
+    kernels = _kernels(N_KERNELS)
+    for k in kernels:
+        k.counts()                       # memoize counting out of the loop
+
+    # warm both paths (compile the [1, F] and [N, F] evaluators)
+    session.predict(kernels[0])
+    session.predict_batch(kernels)
+
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        for k in kernels:
+            session.predict(k)
+    single = (time.perf_counter() - t0) / (REPEATS * N_KERNELS)
+
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        preds = session.predict_batch(kernels)
+    batched = (time.perf_counter() - t0) / (REPEATS * N_KERNELS)
+
+    check = abs(sum(preds[-1].breakdown.values()) - preds[-1].seconds)
+    return [
+        f"predict.single_us_per_kernel,{single * 1e6:.2f},",
+        f"predict.batched_us_per_kernel,{batched * 1e6:.2f},"
+        f"{single / batched:.1f}x",
+        f"predict.batch_size,{N_KERNELS},evals={session.eval_calls}",
+        f"predict.breakdown_residual,{check * 1e6:.3g},",
+    ]

@@ -16,6 +16,8 @@ Benches (one per paper table/figure):
   roofline deliverable g — three-term roofline per (arch × shape)
   study   §8 cross-machine — synthetic fleet study: multi-fit engine
           cold vs solver-cache-warm, closed-loop recovery error
+  predict serving surface — PerfSession single vs batched prediction
+          throughput (one jit-compiled evaluation per batch)
 """
 import sys
 import time
@@ -24,12 +26,14 @@ import time
 def main() -> None:
     from benchmarks import paper_figures as pf
     from benchmarks.calibration_bench import calibration_rows
+    from benchmarks.predict_bench import predict_rows
     from benchmarks.roofline_bench import roofline_rows
     from benchmarks.study_bench import study_rows
 
     benches = {
         "calibration": calibration_rows,
         "study": study_rows,
+        "predict": predict_rows,
         "fig1": pf.fig1_matmul_simple,
         "fig2": pf.fig2_madd_component,
         "fig5": pf.fig5_overlap,

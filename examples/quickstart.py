@@ -1,27 +1,27 @@
-"""Quickstart: the paper's §2 flow in ~50 lines.
+"""Quickstart: the paper's workflow through the ``PerfSession`` facade.
 
-1. define a cost model over automatically-counted kernel features
-2. generate measurement kernels with UIPiCK filter tags
-3. gather feature values (counts + black-box wall times)
-4. calibrate (Levenberg-Marquardt)
-5. predict execution time for an unseen kernel
+1. open a session — loads a saved machine profile, or calibrates this
+   machine on demand (measurement kernels, black-box timings, LM fits)
+2. predict the runtime of any jit-able function from its counted
+   features — zero timings, one jit-compiled batched evaluation
+3. read the cost-explanatory breakdown: which p_* × f_* products the
+   predicted time is made of, and the fit diagnostics it relied on
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
-With ``--profile machine.json`` the calibrated parameters persist: the
-first run measures and saves, every later run loads the profile and
-predicts without re-measuring (the paper's calibrate-once workflow).
-``--cache-dir DIR`` additionally caches raw per-kernel measurements.
+With ``--profile machine.json`` the calibration persists: the first run
+measures and saves, every later run loads the profile and predicts
+without re-measuring (the paper's calibrate-once workflow).
+``--cache-dir DIR`` additionally caches raw per-kernel measurements, so
+even a fresh calibration of an extended battery only measures new
+kernels.
 """
 import argparse
 import pathlib
 
-from repro.core.calibrate import fit_model
-from repro.core.model import Model
-from repro.core.uipick import ALL_GENERATORS, CountingTimer, \
-    KernelCollection, gather_feature_table
-from repro.profiles import DeviceFingerprint, MachineProfile, \
-    MeasurementCache, ModelFit, load_profile, save_profile
+import jax.numpy as jnp
+
+from repro import ALL_GENERATORS, KernelCollection, PerfSession
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--profile", default=None,
@@ -32,58 +32,53 @@ ap.add_argument("--cache-dir", default=None,
 ap.add_argument("--trials", type=int, default=8)
 args = ap.parse_args()
 
-# 1. the model: madd cost + launch overhead (paper eq. 1)
-model = Model(
-    "f_wall_time_cpu_host",
-    "p_f32madd * f_op_float32_madd + p_launch * f_sync_launch_kernel",
-)
-
-# 2. measurement kernels: square matmuls at four sizes (paper §2.2 tags)
-filter_tags = [
-    "matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
-    "n:256,384,640,1024",
-]
-m_knls = KernelCollection(ALL_GENERATORS).generate_kernels(filter_tags)
-print(f"measurement kernels: {[k.name for k in m_knls]}")
-
-fingerprint = DeviceFingerprint.local()
-profile = None
+# 1. one object from kernel → counts → prediction.  A saved profile opens
+#    with ZERO measurements; otherwise the session calibrates this machine
+#    (the cross-machine study battery: flop, memory, launch kernels) and
+#    optionally persists the artifact.
 if args.profile and pathlib.Path(args.profile).exists():
-    profile = load_profile(args.profile, expected_fingerprint=fingerprint)
-
-if profile is not None:
-    # calibrated earlier on this machine: zero measurements needed
-    params = profile.fit_for(model).params
-    print(f"loaded profile {args.profile} (0 kernel timings): {params}")
+    session = PerfSession.open(args.profile, cache=args.cache_dir,
+                               expected_fingerprint="local")
+    print(f"loaded profile {args.profile} "
+          f"({session.calibration['timings']} kernel timings)")
 else:
-    # 3. feature values: symbolic counts + measured wall time, as one dense
-    #    [n_kernels, n_features] table (the batched calibration input)
-    cache = MeasurementCache(args.cache_dir, fingerprint) \
-        if args.cache_dir else None
-    timer = CountingTimer()
-    table = gather_feature_table(model.all_features(), m_knls,
-                                 trials=args.trials, timer=timer,
-                                 cache=cache)
-    print(f"gathered {len(m_knls)} rows with {timer.calls} timing passes")
+    session = PerfSession.open(None, trials=args.trials,
+                               cache=args.cache_dir,
+                               retime_rel_std=0.25,
+                               save_to=args.profile)
+    print(f"calibrated {session.profile.fingerprint.id}: "
+          f"{session.calibration['timings']} timing passes, "
+          f"{session.calibration['retimed']} noisy rows re-timed"
+          + (f", profile saved to {args.profile}" if args.profile else ""))
 
-    # 4. calibrate (all restarts solve in one jit-compiled call)
-    fit = fit_model(model, table, nonneg=True)
-    params = fit.params
-    print(f"calibrated: {params}  (residual {fit.residual_norm:.3g})")
-    if args.profile:
-        save_profile(MachineProfile(
-            fingerprint=fingerprint,
-            fits={"quickstart": ModelFit.from_fit(model, fit)},
-            trials=args.trials,
-            kernel_names=[k.name for k in m_knls]), args.profile)
-        print(f"profile saved to {args.profile}")
+# 2. predict an arbitrary jit-able function from its counted features —
+#    no timing, the cost model explains where the time goes
+n = 768
+pred = session.predict(lambda a, b: a @ b,
+                       jnp.zeros((n, n), jnp.float32),
+                       jnp.zeros((n, n), jnp.float32),
+                       name=f"matmul_{n}")
+print()
+print(pred.explain())
+print(f"fit diagnostics: converged={pred.diagnostics['converged']} "
+      f"held-out gmre={pred.diagnostics['holdout_gmre']}")
 
-print(f"implied madd rate: {1.0 / params['p_f32madd']:.3e} madd/s")
-
-# 5. predict an unseen size and check
+# 3. check against a real measurement of the same kernel
 (test,) = KernelCollection(ALL_GENERATORS).generate_kernels(
-    ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16", "n:768"])
-pred = float(model.evaluate(params, test.counts()))
+    ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16", f"n:{n}"])
 meas = test.time(trials=args.trials)
-print(f"n=768:  predicted {pred * 1e3:.2f} ms   measured {meas * 1e3:.2f} ms "
-      f"  rel.err {abs(pred - meas) / meas * 100:.1f}%")
+print(f"\nn={n}:  predicted {pred.seconds * 1e3:.2f} ms   "
+      f"measured {meas * 1e3:.2f} ms   "
+      f"rel.err {abs(pred.seconds - meas) / meas * 100:.1f}%")
+
+# 4. batched prediction: many kernels, ONE compiled model evaluation
+variants = KernelCollection(ALL_GENERATORS).generate_kernels(
+    ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
+     "n:256,384,512,640"])
+evals_before = session.eval_calls
+preds = session.predict_batch(variants)
+print(f"\nbatched {len(preds)} variants in "
+      f"{session.eval_calls - evals_before} compiled evaluation(s), "
+      f"0 timings:")
+for p in preds:
+    print(f"  {p.kernel}: {p.seconds * 1e3:.3f} ms predicted")

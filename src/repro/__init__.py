@@ -1,0 +1,79 @@
+"""repro — cross-machine black-box GPU performance modeling (the paper's
+mechanism, grown into a JAX subsystem).
+
+The curated stable surface, lazily re-exported so ``import repro`` stays
+cheap and cycle-free:
+
+* facade:     :class:`PerfSession`, :class:`Prediction`,
+              :class:`PredictionError` (``repro.api``)
+* modeling:   :class:`Model`, :class:`FeatureTable`,
+              :class:`FeatureCounts`, :func:`count_fn`
+* measuring:  :func:`gather_feature_table`, :class:`CountingTimer`,
+              :class:`KernelCollection`, :data:`ALL_GENERATORS`
+* fitting:    :func:`fit_model`, :func:`fit_models`, :class:`FitResult`
+* artifacts:  :class:`MachineProfile`, :func:`load_profile`,
+              :func:`save_profile`, :class:`MeasurementCache`,
+              :class:`DeviceFingerprint`, :class:`ProfileError`
+* studies:    :func:`run_study`, :func:`compare_profiles`,
+              :func:`scope_accuracy_sweep`, :data:`MODEL_ZOO`
+
+Anything not listed here is internal layering: importable, but subject to
+refactoring between releases.
+"""
+from importlib import import_module
+from typing import Any
+
+__version__ = "0.2.0"
+
+_EXPORTS = {
+    # facade
+    "PerfSession": "repro.api",
+    "Prediction": "repro.api",
+    "PredictionError": "repro.api",
+    "DEFAULT_MODEL": "repro.api",
+    # modeling
+    "Model": "repro.core.model",
+    "FeatureTable": "repro.core.model",
+    "FeatureCounts": "repro.core.counting",
+    "count_fn": "repro.core.counting",
+    # measuring
+    "gather_feature_table": "repro.core.uipick",
+    "CountingTimer": "repro.core.uipick",
+    "KernelCollection": "repro.core.uipick",
+    "MeasurementKernel": "repro.core.uipick",
+    "ALL_GENERATORS": "repro.core.uipick",
+    "MatchCondition": "repro.core.uipick",
+    # fitting
+    "fit_model": "repro.core.calibrate",
+    "fit_models": "repro.core.calibrate",
+    "FitResult": "repro.core.calibrate",
+    # artifacts
+    "MachineProfile": "repro.profiles",
+    "ModelFit": "repro.profiles",
+    "ProfileError": "repro.profiles",
+    "load_profile": "repro.profiles",
+    "save_profile": "repro.profiles",
+    "MeasurementCache": "repro.profiles",
+    "DeviceFingerprint": "repro.profiles",
+    # studies
+    "MODEL_ZOO": "repro.studies",
+    "run_study": "repro.studies",
+    "compare_profiles": "repro.studies",
+    "scope_accuracy_sweep": "repro.studies",
+    "StudyReport": "repro.studies",
+}
+
+__all__ = sorted(_EXPORTS) + ["__version__"]
+
+
+def __getattr__(name: str) -> Any:
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    value = getattr(import_module(target), name)
+    globals()[name] = value         # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return __all__

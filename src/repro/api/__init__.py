@@ -1,0 +1,24 @@
+"""``repro.api`` — the stable prediction facade.
+
+One object from kernel → counts → cross-machine prediction:
+
+* :class:`PerfSession` — open a machine profile (or calibrate on demand)
+  and predict any kernel's runtime on that machine, explained
+* :class:`Prediction` — seconds + per-term cost breakdown + diagnostics
+* :class:`PredictionError` — every facade failure, typed and actionable
+
+This package is the serving surface the ROADMAP's north star builds on;
+the layers underneath (``repro.core``, ``repro.profiles``,
+``repro.studies``) stay importable but the facade is the supported API.
+"""
+from repro.api.errors import PredictionError, suggest_calibration_tags
+from repro.api.prediction import Prediction
+from repro.api.session import DEFAULT_MODEL, PerfSession
+
+__all__ = [
+    "DEFAULT_MODEL",
+    "PerfSession",
+    "Prediction",
+    "PredictionError",
+    "suggest_calibration_tags",
+]

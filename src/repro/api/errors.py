@@ -1,0 +1,45 @@
+"""Typed errors of the prediction facade.
+
+The facade's contract is that every failure names what went wrong AND what
+to do about it: a model missing from a profile lists the fits the profile
+does carry; an out-of-scope kernel names the unmodeled feature and the
+UIPiCK filter tags whose measurement kernels would calibrate a term for
+it.  ``KeyError`` leaking out of a prediction is a bug.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+class PredictionError(RuntimeError):
+    """A prediction request that cannot be satisfied: unknown model name,
+    incomplete fitted parameters, or (in strict-scope mode) a kernel whose
+    counted work falls outside the model's scope."""
+
+
+# feature-id prefix → the UIPiCK filter tags whose generated measurement
+# kernels expose that feature class (so the error message for an
+# out-of-scope feature can say how to calibrate it).  Ordered: first match
+# wins, most-specific first.
+_FEATURE_CLASS_TAGS = [
+    ("f_op_", "_madd", ["matmul_sq", "flops_dot_pattern"]),
+    ("f_op_", "_transc", ["onchip_pattern"]),
+    ("f_op_", "", ["flops_madd_pattern", "mem_stream"]),
+    ("f_mem_contig", "", ["mem_stream", "pattern:contig"]),
+    ("f_mem_strided", "", ["mem_stream", "pattern:strided"]),
+    ("f_mem_gather", "", ["mem_stream", "pattern:gather"]),
+    ("f_mem_concat", "", ["mem_stream", "pattern:shift"]),
+    ("f_mem_scatter", "", ["mem_stream"]),
+    ("f_sync_launch", "", ["empty_kernel"]),
+    ("f_sync_loop", "", ["sync_loop_pattern"]),
+]
+
+
+def suggest_calibration_tags(feature_id: str) -> List[str]:
+    """UIPiCK filter tags whose measurement kernels would exercise (and so
+    calibrate a cost for) ``feature_id``; empty when no built-in generator
+    covers the class (e.g. collectives)."""
+    for prefix, suffix, tags in _FEATURE_CLASS_TAGS:
+        if feature_id.startswith(prefix) and feature_id.endswith(suffix):
+            return list(tags)
+    return []

@@ -1,0 +1,377 @@
+"""``PerfSession`` — one object from kernel → counts → prediction.
+
+The paper's workflow, previously hand-wired across four packages
+(``count_fn`` → ``FeatureCounts`` → feature alignment → ``MachineProfile``
+→ ``Model.batched_eval``), behind a single facade::
+
+    from repro import PerfSession
+
+    session = PerfSession.open("machine_profile.json")
+    pred = session.predict(lambda a, b: a @ b, x, y, model="ovl_flop_mem")
+    print(pred.seconds, pred.breakdown)        # cost-explanatory
+    preds = session.predict_batch(kernels)     # one jit-compiled eval
+
+Opening from a profile path performs ZERO measurements; opening from a
+device (``None`` = this machine, or a synthetic ground-truth device) runs
+the cache-backed calibration study on demand.  Prediction never times a
+kernel: features come from the one-pass jaxpr counter (or the measurement
+cache), and every batch is evaluated in a single jit-compiled
+``batched_breakdown`` call, so throughput scales with batch size, not
+Python dispatch.  ``eval_calls``/``trace_count`` make that claim
+observable — tests assert exactly one compiled evaluation per batch.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.errors import PredictionError, suggest_calibration_tags
+from repro.api.prediction import Prediction, assemble_predictions
+from repro.core.calibrate import gmre_of, relative_errors
+from repro.core.counting import FeatureCounts, count_fn
+from repro.core.model import Model, _param_dtype
+from repro.core.uipick import CountingTimer, MeasurementKernel
+from repro.profiles.cache import MeasurementCache
+from repro.profiles.fingerprint import DeviceFingerprint
+from repro.profiles.profile import (
+    MachineProfile,
+    ModelFit,
+    ProfileError,
+    load_profile,
+    save_profile,
+)
+
+#: default fit to predict with when the caller names none and the profile
+#: carries several (the zoo's widest-scope form)
+DEFAULT_MODEL = "ovl_flop_mem"
+
+# one predict_batch item: a measurement kernel, a bare callable, or a
+# (callable, example_args) pair
+PredictItem = Union[MeasurementKernel, Callable, Tuple[Callable, tuple]]
+
+
+class PerfSession:
+    """A loaded-and-validated machine profile plus everything needed to
+    predict with it: compiled per-model evaluators, the measurement cache,
+    and the injectable timer seam (used only if calibration runs)."""
+
+    def __init__(self, profile: MachineProfile, *,
+                 cache: Optional[MeasurementCache] = None,
+                 timer: Optional[CountingTimer] = None,
+                 calibration: Optional[Dict[str, Any]] = None):
+        self.profile = profile
+        self.cache = cache
+        self.timer = _as_counting_timer(timer)
+        # how this session's profile came to be (observability: the CLI
+        # prints it, tests assert the zero-timing warm path against it)
+        self.calibration: Dict[str, Any] = dict(calibration or {})
+        # batched-evaluation observability: dispatches and (re)traces of
+        # the jit-compiled breakdown evaluator
+        self.eval_calls = 0
+        self.trace_count = 0
+        self._compiled: Dict[str, Callable] = {}
+        self._fit_diag: Dict[str, Dict[str, Any]] = {}
+        # resolved (ModelFit, Model) per fit name: ModelFit.model() builds
+        # a fresh Model (AST parse + breakdown-plan compile) — pay that
+        # once per fit, not once per predict on the serving hot path
+        self._resolved: Dict[str, Tuple[ModelFit, Model]] = {}
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def open(cls, source: Union[None, str, Path, MachineProfile,
+                                Any] = None, *,
+             tags: Optional[Sequence[str]] = None,
+             trials: int = 8,
+             cache: Union[None, str, Path, MeasurementCache] = None,
+             expected_fingerprint: Union[None, str,
+                                         DeviceFingerprint] = None,
+             holdout_fraction: float = 0.25,
+             retime_rel_std: Optional[float] = None,
+             timer: Optional[Callable] = None,
+             save_to: Union[None, str, Path] = None) -> "PerfSession":
+        """Open a prediction session.
+
+        ``source`` selects where the fitted models come from:
+
+        * a **path** — load + strictly validate an existing profile
+          (``ProfileError`` on corruption, wrong schema, or — when
+          ``expected_fingerprint`` is a fingerprint or the string
+          ``"local"`` — foreign hardware).  Zero measurements.
+        * a **MachineProfile** — wrap it directly.
+        * ``None`` — calibrate THIS machine on demand: the full
+          cache-backed study (gather → zoo multi-fit → holdout) with
+          ``tags``/``trials``/``retime_rel_std`` forwarded.
+        * a **device object** exposing ``.fingerprint`` and ``.timer``
+          (e.g. :class:`repro.testing.synthdev.SyntheticDevice`) —
+          calibrate that device through its injectable timer.
+
+        ``cache`` may be a :class:`~repro.profiles.MeasurementCache` or a
+        directory path; it serves calibration timings AND count lookups
+        during prediction.  ``save_to`` persists an on-demand calibration
+        as a normal profile artifact.
+        """
+        if isinstance(source, MachineProfile):
+            profile = source
+            _check_fingerprint(profile, expected_fingerprint)
+            return cls(profile,
+                       cache=_as_cache(cache, profile.fingerprint),
+                       timer=timer,
+                       calibration={"source": "profile", "timings": 0,
+                                    "retimed": 0})
+        if isinstance(source, (str, Path)):
+            fp = expected_fingerprint
+            if fp == "local":
+                fp = DeviceFingerprint.local()
+            profile = load_profile(source, expected_fingerprint=fp)
+            return cls(profile,
+                       cache=_as_cache(cache, profile.fingerprint),
+                       timer=timer,
+                       calibration={"source": f"profile:{source}",
+                                    "timings": 0, "retimed": 0})
+
+        # calibrate on demand (local hardware or an injectable device)
+        from repro.studies.study import run_study
+        from repro.studies.zoo import STUDY_TAGS
+
+        if source is None:
+            fingerprint = DeviceFingerprint.local()
+            base_timer = timer
+        elif hasattr(source, "fingerprint") and hasattr(source, "timer"):
+            fingerprint = source.fingerprint
+            base_timer = timer or source.timer
+        else:
+            raise TypeError(
+                f"PerfSession.open expects a profile path, a "
+                f"MachineProfile, a device with .fingerprint/.timer, or "
+                f"None (this machine); got {type(source).__name__}")
+        counting = _as_counting_timer(base_timer)
+        mcache = _as_cache(cache, fingerprint)
+        profile = run_study(
+            fingerprint=fingerprint, timer=counting, cache=mcache,
+            tags=tags or STUDY_TAGS, trials=trials,
+            holdout_fraction=holdout_fraction,
+            retime_rel_std=retime_rel_std)
+        if save_to is not None:
+            save_profile(profile, save_to)
+        return cls(profile, cache=mcache, timer=counting,
+                   calibration={
+                       "source": f"calibrated:{fingerprint.id}",
+                       "timings": counting.calls,
+                       "cache_hits": mcache.hits if mcache else 0,
+                       "retimed": len(getattr(profile, "retimed_rows", [])),
+                   })
+
+    # ------------------------------------------------------------------
+    # prediction
+    # ------------------------------------------------------------------
+
+    def predict(self, fn: PredictItem, *args,
+                model: Optional[str] = None,
+                name: Optional[str] = None,
+                strict: bool = False) -> Prediction:
+        """Predict one kernel: ``fn`` is a jit-able callable (called with
+        ``*args`` example arguments for counting) or a
+        :class:`MeasurementKernel`.  Counts the jaxpr once, aligns against
+        the fitted model, evaluates through the same compiled batched path
+        as :meth:`predict_batch` (batch of one)."""
+        item: PredictItem = fn if isinstance(fn, MeasurementKernel) \
+            else (fn, args)
+        return self.predict_batch(
+            [item], model=model,
+            names=[name] if name is not None else None,
+            strict=strict)[0]
+
+    def predict_batch(self, items: Sequence[PredictItem], *,
+                      model: Optional[str] = None,
+                      names: Optional[Sequence[str]] = None,
+                      strict: bool = False) -> List[Prediction]:
+        """Predict every item in ONE jit-compiled batched model
+        evaluation: rows are packed into a single dense feature matrix and
+        the per-term breakdown of the whole batch comes back from one
+        compiled call — zero kernel timings, no per-row Python dispatch.
+
+        ``strict=True`` turns out-of-scope work into a typed
+        :class:`PredictionError` (naming the unmodeled feature and the
+        UIPiCK tags that would calibrate it); the default records such
+        features per prediction in ``Prediction.unmodeled``.
+        """
+        items = list(items)
+        if not items:
+            return []
+        if names is not None and len(names) != len(items):
+            raise ValueError(f"names has {len(names)} entries for "
+                             f"{len(items)} items")
+        fit_name, mf, m = self._resolve_model(model)
+        kernel_names: List[str] = []
+        counts_rows: List[FeatureCounts] = []
+        for idx, item in enumerate(items):
+            kname, counts = self._counts_of(item, idx)
+            kernel_names.append(names[idx] if names is not None else kname)
+            counts_rows.append(counts)
+
+        unmodeled = [m.unmodeled_features(c) for c in counts_rows]
+        if strict:
+            for kname, extra in zip(kernel_names, unmodeled):
+                if extra:
+                    feat = next(iter(extra))
+                    tags = suggest_calibration_tags(feat)
+                    hint = (f"calibrate it with UIPiCK tags {tags}"
+                            if tags else
+                            "no built-in generator covers this class")
+                    raise PredictionError(
+                        f"kernel {kname!r} performs work outside the "
+                        f"scope of model {fit_name!r}: unmodeled "
+                        f"feature(s) {sorted(extra)}; {feat!r} — {hint}. "
+                        f"Widen the model, or predict with strict=False "
+                        f"to carry unmodeled features as diagnostics")
+
+        aligned = m.align(counts_rows)          # counts: absent == 0
+        dt = _param_dtype()
+        p_vec = jnp.asarray([mf.params[n] for n in m.param_names], dt)
+        parts = self._evaluator(m)(p_vec, jnp.asarray(aligned, dt))
+        self.eval_calls += 1
+        return assemble_predictions(
+            kernel_names=kernel_names,
+            fit_name=fit_name,
+            labels=m.breakdown_labels,
+            parts=parts,
+            feature_names=m.feature_names,
+            aligned=aligned,
+            unmodeled=unmodeled,
+            params=mf.params,
+            diagnostics=self._diagnostics_for(fit_name, mf, m),
+        )
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _resolve_model(self, model: Optional[str]
+                       ) -> Tuple[str, ModelFit, Model]:
+        fits = self.profile.fits
+        name = model
+        if name is None:
+            if DEFAULT_MODEL in fits:
+                name = DEFAULT_MODEL
+            elif len(fits) == 1:
+                name = next(iter(fits))
+            else:
+                raise PredictionError(
+                    f"profile for {self.profile.fingerprint.id!r} carries "
+                    f"fits {self.profile.fit_names} and none is the "
+                    f"default {DEFAULT_MODEL!r}; pass model=<name>")
+        cached = self._resolved.get(name)
+        if cached is not None:
+            return name, *cached
+        try:
+            mf = self.profile.get_fit(name)
+        except ProfileError as e:
+            raise PredictionError(str(e)) from e
+        m = mf.model()
+        missing = [p for p in m.param_names if p not in mf.params]
+        if missing:
+            raise PredictionError(
+                f"fit {name!r} lacks fitted values for parameter(s) "
+                f"{missing} of its own expression — the profile was "
+                f"edited or corrupted; recalibrate")
+        self._resolved[name] = (mf, m)
+        return name, mf, m
+
+    def _counts_of(self, item: PredictItem, idx: int
+                   ) -> Tuple[str, FeatureCounts]:
+        """One kernel's counted features — through the measurement cache
+        when the item has a stable identity, never through a timer."""
+        if isinstance(item, MeasurementKernel):
+            trials = self.profile.trials
+            if self.cache is not None:
+                entry = self.cache.get(item, trials)
+                if entry is not None:
+                    return item.name, entry.counts
+                counts = item.counts()
+                # counts-only entry: a later gather backfills the timing
+                self.cache.put(item, trials, None, counts)
+                return item.name, counts
+            return item.name, item.counts()
+        if isinstance(item, tuple):
+            fn, args = item
+            kname = getattr(fn, "__name__", "kernel")
+            if kname == "<lambda>":
+                kname = "kernel"
+            return f"{kname}[{idx}]", count_fn(fn, *args)
+        if callable(item):
+            kname = getattr(item, "__name__", "kernel")
+            if kname == "<lambda>":
+                kname = "kernel"
+            return f"{kname}[{idx}]", count_fn(item)
+        raise TypeError(
+            f"predict item #{idx} must be a MeasurementKernel, a "
+            f"callable, or a (callable, args) pair; "
+            f"got {type(item).__name__}")
+
+    def _evaluator(self, model: Model) -> Callable:
+        sig = model.signature()
+        fn = self._compiled.get(sig)
+        if fn is None:
+            def parts_fn(p_vec, F, _model=model):
+                # the Python body runs only while jax traces — this
+                # counter IS the trace-count probe tests assert against
+                self.trace_count += 1
+                return _model.batched_breakdown(p_vec, F)
+
+            fn = jax.jit(parts_fn)
+            self._compiled[sig] = fn
+        return fn
+
+    def _diagnostics_for(self, fit_name: str, mf: ModelFit, m: Model
+                         ) -> Dict[str, Any]:
+        diag = self._fit_diag.get(fit_name)
+        if diag is None:
+            diag = {
+                "fingerprint": self.profile.fingerprint.id,
+                "signature": mf.signature,
+                "residual_norm": mf.fit.residual_norm,
+                "iterations": mf.fit.iterations,
+                "converged": mf.fit.converged,
+                "trials": self.profile.trials,
+                "holdout_gmre": None,
+            }
+            holdout = self.profile.holdout
+            if holdout is not None and len(holdout):
+                try:
+                    diag["holdout_gmre"] = gmre_of(
+                        relative_errors(m, mf.params, holdout))
+                    diag["holdout_noise"] = holdout.noise_summary()
+                except ValueError:
+                    pass        # holdout lacks this model's columns
+            self._fit_diag[fit_name] = diag
+        return diag
+
+
+def _as_counting_timer(timer) -> CountingTimer:
+    if isinstance(timer, CountingTimer):
+        return timer
+    return CountingTimer(timer) if timer is not None else CountingTimer()
+
+
+def _as_cache(cache, fingerprint) -> Optional[MeasurementCache]:
+    if cache is None or isinstance(cache, MeasurementCache):
+        return cache
+    return MeasurementCache(cache, fingerprint)
+
+
+def _check_fingerprint(profile: MachineProfile, expected) -> None:
+    if expected is None:
+        return
+    if expected == "local":
+        expected = DeviceFingerprint.local()
+    if profile.fingerprint != expected:
+        raise ProfileError(
+            f"profile was calibrated on {profile.fingerprint.id!r} but "
+            f"{expected.id!r} was required; recalibrate with "
+            f"`python -m repro.calibrate`")

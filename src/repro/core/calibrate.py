@@ -370,8 +370,7 @@ def relative_errors(model: Model, params: Mapping[str, float],
             f"measured output {model.output_feature!r} is zero for row "
             f"{ft.row_names[int(bad[0])]!r}; relative error is undefined")
     dt = _param_dtype()
-    F = np.stack([ft.column(n) for n in model.feature_names], axis=1) \
-        if model.feature_names else np.zeros((len(ft), 0))
+    F = model.align(ft, missing="zero")     # presence validated above
     p_vec = jnp.asarray([params[n] for n in model.param_names], dt)
     pred = np.asarray(model.batched_eval(p_vec, jnp.asarray(F, dt)),
                       np.float64)

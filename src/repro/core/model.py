@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import ast
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core import overlap as _ovl
 from repro.core.counting import FeatureCounts
+from repro.deprecation import warn_once
 
 _FUNCS: Dict[str, Callable] = {
     "smooth_step": _ovl.smooth_step,
@@ -66,6 +67,38 @@ def _parse(expr: str) -> ast.Expression:
 def _names(tree: ast.Expression) -> List[str]:
     return sorted({n.id for n in ast.walk(tree)
                    if isinstance(n, ast.Name) and n.id not in _FUNCS})
+
+
+# cost-combining functions whose value can be attributed back to their
+# leading cost arguments (the paper's "cost-explanatory" requirement for
+# nonlinear models): function name → how many leading arguments are costs.
+# ``None`` means all-but-the-last argument (smoothmax's variadic tuple).
+_ATTRIBUTABLE_CALLS: Dict[str, Optional[int]] = {
+    "overlap2": 2, "overlap2_raw": 2, "overlap3": 3,
+    "partial_overlap2": 2, "smoothmax": None,
+}
+
+
+def _signed_terms(node: ast.expr, sign: float = 1.0):
+    """Split an expression at top-level +/- into (sign, term-node) pairs."""
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        yield from _signed_terms(node.left, sign)
+        yield from _signed_terms(node.right, sign)
+    elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+        yield from _signed_terms(node.left, sign)
+        yield from _signed_terms(node.right, -sign)
+    elif isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        yield from _signed_terms(node.operand, -sign)
+    elif isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.UAdd):
+        yield from _signed_terms(node.operand, sign)
+    else:
+        yield sign, node
+
+
+def _compile_node(node: ast.expr):
+    expr = ast.Expression(body=node)
+    ast.fix_missing_locations(expr)
+    return compile(expr, "<perflex-term>", "eval")
 
 
 def _param_dtype():
@@ -106,6 +139,10 @@ class FeatureTable:
         self._col = {f: i for i, f in enumerate(self.feature_ids)}
         if not self.row_names:
             self.row_names = [f"row{i}" for i in range(len(self.values))]
+        # transient gather provenance (NOT serialized, not carried through
+        # select): names of rows the noisy-row heuristic re-timed — see
+        # gather_feature_table(retime_rel_std=...)
+        self.retimed_rows: List[str] = []
 
     def __len__(self) -> int:
         return self.values.shape[0]
@@ -216,6 +253,8 @@ class Model:
         self._eval = evaluator
         # jitted-solver cache, keyed by solver options (repro.core.calibrate)
         self._solver_cache: Dict[tuple, Callable] = {}
+        # per-term breakdown plan, built lazily on first breakdown request
+        self._breakdown_plan: Optional[List[tuple]] = None
 
     # -- feature bookkeeping ------------------------------------------------
     def all_features(self) -> List[str]:
@@ -243,7 +282,66 @@ class Model:
 
     def eval_with_counts(self, param_values: Mapping[str, float],
                          counts: FeatureCounts):
+        """Deprecated: use :meth:`align` + :meth:`batched_eval`, or the
+        :class:`repro.api.PerfSession` facade."""
+        warn_once(
+            "Model.eval_with_counts",
+            "Model.eval_with_counts is deprecated; use Model.align + "
+            "Model.batched_eval, or repro.api.PerfSession.predict")
         return float(self.evaluate(param_values, counts))
+
+    # -- feature alignment --------------------------------------------------
+    def align(self, counts: Union[FeatureTableLike, Mapping[str, float]],
+              *, missing: str = "error") -> np.ndarray:
+        """Align feature values against this model: a dense
+        ``[n_rows, n_features]`` float64 matrix with columns ordered as
+        ``self.feature_names`` — the one sanctioned bridge from counted
+        kernels to :meth:`batched_eval`/:meth:`batched_breakdown`.
+
+        ``counts`` may be a single :class:`FeatureCounts`-like mapping, a
+        sequence of them (one row each), or a gathered
+        :class:`FeatureTable`.  Mappings follow counts semantics: a feature
+        the counter never produced is genuinely zero.  For a
+        ``FeatureTable`` the ``missing`` policy applies to absent columns:
+        ``"error"`` (default) raises ``ValueError`` naming them — a
+        gathered table lacking a column means the feature was never
+        measured, and silently reading 0 fabricates predictions —
+        while ``"zero"`` keeps the legacy zero-fill behavior.
+        """
+        if missing not in ("error", "zero"):
+            raise ValueError(f"missing must be 'error' or 'zero', "
+                             f"got {missing!r}")
+        if isinstance(counts, Mapping):
+            counts = [counts]
+        if isinstance(counts, FeatureTable):
+            absent = [n for n in self.feature_names
+                      if n not in counts.feature_ids]
+            if absent and missing == "error":
+                raise ValueError(
+                    f"feature table lacks columns {absent} required by the "
+                    f"{self.output_feature!r} model (alignment would "
+                    f"silently read them as 0) — re-gather with these "
+                    f"features")
+            if not self.feature_names:
+                return np.zeros((len(counts), 0), np.float64)
+            return np.stack([counts.column(n) for n in self.feature_names],
+                            axis=1)
+        rows = list(counts)
+        out = np.zeros((len(rows), len(self.feature_names)), np.float64)
+        for i, r in enumerate(rows):
+            for j, n in enumerate(self.feature_names):
+                out[i, j] = float(r.get(n, 0.0))
+        return out
+
+    def unmodeled_features(self, counts: Mapping[str, float]
+                           ) -> Dict[str, float]:
+        """Nonzero counted features this model has NO term for — the scope
+        diagnostic behind the facade's strict-scope prediction mode (work
+        the kernel performs that the model cannot attribute a cost to)."""
+        known = set(self.feature_names)
+        known.add(self.output_feature)
+        return {k: float(v) for k, v in sorted(counts.items())
+                if k not in known and not k.startswith("_") and float(v)}
 
     def batched_eval(self, p_vec: jax.Array, features: jax.Array
                      ) -> jax.Array:
@@ -257,6 +355,87 @@ class Model:
         out = self._eval(env)
         # constant-only expressions broadcast to one value per row
         return jnp.broadcast_to(out, (features.shape[0],))
+
+    # -- cost-explanatory per-term breakdown --------------------------------
+    def _plan(self) -> List[tuple]:
+        """Lazily-built breakdown plan: the expression split at top-level
+        +/- into signed terms, each compiled separately; attributable
+        nonlinear calls (overlap2 & co) additionally carry compiled
+        evaluators for their cost arguments so their value can be split
+        back into per-component contributions."""
+        if self._breakdown_plan is None:
+            plan = []
+            for sign, node in _signed_terms(self._tree.body):
+                prefix = "-" if sign < 0 else ""
+                label = prefix + ast.unparse(node)
+                comps = None
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in _ATTRIBUTABLE_CALLS:
+                    k = _ATTRIBUTABLE_CALLS[node.func.id]
+                    if k is None:
+                        k = len(node.args) - 1
+                    if 2 <= k <= len(node.args):
+                        comps = [(f"{prefix}{node.func.id}"
+                                  f"[{ast.unparse(a)}]", _compile_node(a))
+                                 for a in node.args[:k]]
+                plan.append((sign, label, _compile_node(node), comps))
+            self._breakdown_plan = plan
+        return self._breakdown_plan
+
+    @property
+    def breakdown_labels(self) -> List[str]:
+        """Column labels of :meth:`batched_breakdown`, in order."""
+        labels: List[str] = []
+        for _sign, label, _code, comps in self._plan():
+            if comps is None:
+                labels.append(label)
+            else:
+                labels.extend(cl for cl, _ in comps)
+        return labels
+
+    def batched_breakdown(self, p_vec: jax.Array, features: jax.Array
+                          ) -> jax.Array:
+        """Per-term cost contributions: ``[n_rows, n_parts]`` with columns
+        labeled by :attr:`breakdown_labels` — the paper's cost-explanatory
+        attribute as data.  Row sums equal the model's predicted value by
+        construction: top-level additive terms are evaluated separately,
+        and an attributable nonlinear term (e.g. ``overlap2``) is split
+        into per-component parts proportional to its component costs, with
+        the LAST part computed as the term value minus the others so the
+        split is exact, not approximate.  Trace-safe; same column
+        conventions as :meth:`batched_eval`.
+        """
+        env: Dict[str, jax.Array] = {
+            n: p_vec[i] for i, n in enumerate(self.param_names)}
+        env.update({n: features[:, j]
+                    for j, n in enumerate(self.feature_names)})
+        ns = {**_FUNCS, **env}
+        scope = {"__builtins__": {}}
+        n_rows = features.shape[0]
+        cols: List[jax.Array] = []
+        for sign, _label, code, comps in self._plan():
+            v = eval(code, scope, ns)
+            if sign != 1.0:
+                v = v * sign
+            v = jnp.broadcast_to(v, (n_rows,))
+            if comps is None:
+                cols.append(v)
+                continue
+            cvals = [jnp.broadcast_to(jnp.abs(eval(c_code, scope, ns)),
+                                      (n_rows,))
+                     for _cl, c_code in comps]
+            tot = cvals[0]
+            for c in cvals[1:]:
+                tot = tot + c
+            safe = jnp.where(tot > 0, tot, 1.0)
+            acc = jnp.zeros_like(v)
+            for c in cvals[:-1]:
+                part = v * jnp.where(tot > 0, c / safe, 1.0 / len(cvals))
+                cols.append(part)
+                acc = acc + part
+            cols.append(v - acc)
+        return jnp.stack(cols, axis=1)
 
     # -- design matrix ------------------------------------------------------
     def design_matrix(self, table: FeatureTableLike,
@@ -273,8 +452,9 @@ class Model:
                 f"output feature {self.output_feature!r} not present in the "
                 f"feature table (columns: {ft.feature_ids})")
         t = ft.column(self.output_feature)
-        F = np.stack([ft.column(n) for n in self.feature_names], axis=1) \
-            if self.feature_names else np.zeros((len(ft), 0))
+        # legacy zero-fill: fitting tolerates never-gathered columns (the
+        # strict path is Model.align's default, used by the facade)
+        F = self.align(ft, missing="zero")
         if scale_by_output:
             bad = np.flatnonzero(~(t > 0))
             if bad.size:

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import enum
 import hashlib
+import inspect
 import itertools
 import time
 from dataclasses import dataclass, field
@@ -29,6 +30,21 @@ import numpy as np
 
 from repro.core.counting import FeatureCounts, count_fn
 from repro.core.model import FeatureTable
+from repro.deprecation import warn_once
+
+
+def source_signature(fn: Callable) -> str:
+    """Cheap source-level identity of a callable: SHA-256 of its
+    ``inspect.getsource`` text, truncated.  Computed once at generator
+    registration — NO tracing, no jaxpr — so warm cache runs stay free,
+    yet editing a generator's body changes the signature and naturally
+    invalidates that generator's measurement-cache entries.  Callables
+    without retrievable source (REPL/exec) sign as ``""``."""
+    try:
+        src = inspect.getsource(fn)
+    except (OSError, TypeError):
+        return ""
+    return hashlib.sha256(src.encode()).hexdigest()[:16]
 
 
 class MatchCondition(enum.Enum):
@@ -76,6 +92,11 @@ class MeasurementKernel:
     make_args: Callable[[], tuple]
     tags: Dict[str, Any]
     sizes: Dict[str, int] = field(default_factory=dict)
+    # source-level identity of the generator body that built this kernel
+    # (see :func:`source_signature`); part of the measurement-cache key so
+    # editing a generator invalidates its cached timings without a global
+    # schema bump.  "" for hand-built kernels (tests, ad-hoc measurement).
+    code_sig: str = ""
 
     _counts: Optional[FeatureCounts] = None
     _jitted: Optional[Callable] = None
@@ -125,6 +146,13 @@ class Generator:
     gen_tags: FrozenSet[str]
     arg_space: Dict[str, Tuple[Any, ...]]
     build: Callable[..., MeasurementKernel]
+    code_sig: str = ""
+
+    def __post_init__(self):
+        # signature of the builder source (which lexically contains the
+        # kernel bodies it closes over) — computed ONCE at registration
+        if not self.code_sig:
+            self.code_sig = source_signature(self.build)
 
     def variants(self, constraints: Mapping[str, Tuple[Any, ...]]
                  ) -> Iterable[MeasurementKernel]:
@@ -141,9 +169,12 @@ class Generator:
         for combo in itertools.product(*(space[n] for n in names)):
             kw = dict(zip(names, combo))
             try:
-                yield self.build(**kw)
+                kernel = self.build(**kw)
             except _SkipVariant:
                 continue
+            if not kernel.code_sig:
+                kernel.code_sig = self.code_sig
+            yield kernel
 
 
 class _SkipVariant(Exception):
@@ -228,6 +259,16 @@ class CountingTimer:
         return self._timer(kernel, trials)
 
 
+def _rel_std(stats: TimingStats) -> float:
+    """Relative wall-clock spread of one measurement; inf when unknown
+    (a spread-less measurement can never WIN a retime comparison, and a
+    measurement without std is never retime-ELIGIBLE — gated separately,
+    so bare-seconds timers don't read as infinitely noisy)."""
+    if stats.std is None or not stats.median > 0:
+        return float("inf")
+    return stats.std / stats.median
+
+
 def gather_feature_table(
     features: Sequence[str],
     kernels: Sequence[MeasurementKernel],
@@ -235,6 +276,7 @@ def gather_feature_table(
     trials: int = 20,
     timer: Optional[Callable[[MeasurementKernel, int], float]] = None,
     cache: Optional[Any] = None,
+    retime_rel_std: Optional[float] = None,
 ) -> FeatureTable:
     """Dense timing table: one row per measurement kernel, one column per
     feature id — the native input of the batched calibration pipeline.
@@ -251,6 +293,16 @@ def gather_feature_table(
     :class:`repro.profiles.MeasurementCache`-shaped object — on a cache hit
     neither the timer nor the jaxpr counter runs, so a warm recalibration
     performs zero timings.
+
+    ``retime_rel_std`` is the noisy-row re-measurement heuristic (ROADMAP
+    follow-up): rows whose relative wall-clock std exceeds the threshold
+    get ONE extra timing pass before the table is returned — including
+    rows served from the cache, since re-measuring noisy entries is the
+    point — and the lower-spread measurement wins (and replaces the cache
+    entry).  Re-timed row names are recorded in the returned table's
+    ``retimed_rows`` so callers (CLI, ``PerfSession``) can surface how
+    much of the battery was unstable.  Note this intentionally trades the
+    warm-cache zero-timing guarantee for timing quality on noisy rows.
     """
     features = list(features)
     timer = timer or default_timer
@@ -260,6 +312,7 @@ def gather_feature_table(
                   if not f.startswith("f_wall_time")]
     values = np.zeros((len(kernels), len(features)), np.float64)
     row_noise: Dict[str, Dict[str, float]] = {}
+    retimed: List[str] = []
     for i, k in enumerate(kernels):
         entry = cache.get(k, trials) if cache is not None else None
         stats: Optional[TimingStats] = None
@@ -280,6 +333,16 @@ def gather_feature_table(
                 wall = None
             if cache is not None:
                 cache.put(k, trials, wall, counts, noise=stats)
+        if (retime_rel_std is not None and wall_cols and stats is not None
+                and stats.std is not None
+                and _rel_std(stats) > retime_rel_std):
+            # noisy row: one extra pass; the steadier measurement wins
+            fresh = TimingStats.coerce(timer(k, trials))
+            retimed.append(k.name)
+            if _rel_std(fresh) < _rel_std(stats):
+                stats, wall = fresh, fresh.median
+                if cache is not None:
+                    cache.put(k, trials, wall, counts, noise=stats)
         if stats is not None and (stats.std is not None
                                   or stats.min is not None):
             row_noise[k.name] = stats.to_dict()
@@ -287,8 +350,10 @@ def gather_feature_table(
             values[i, j] = counts[f]
         for j in wall_cols:
             values[i, j] = wall
-    return FeatureTable(features, values, [k.name for k in kernels],
-                        row_noise)
+    table = FeatureTable(features, values, [k.name for k in kernels],
+                         row_noise)
+    table.retimed_rows = retimed
+    return table
 
 
 def gather_feature_values(
@@ -299,7 +364,11 @@ def gather_feature_values(
     timer: Optional[Callable[[MeasurementKernel, int], float]] = None,
     cache: Optional[Any] = None,
 ) -> List[Dict[str, float]]:
-    """Dict-per-row view of :func:`gather_feature_table` (original API)."""
+    """Deprecated dict-per-row view of :func:`gather_feature_table`."""
+    warn_once(
+        "gather_feature_values",
+        "gather_feature_values is deprecated; use "
+        "gather_feature_table(...).rows() (or the FeatureTable directly)")
     return gather_feature_table(features, kernels, trials=trials,
                                 timer=timer, cache=cache).rows()
 

@@ -16,11 +16,18 @@ fingerprint, trials count, cache schema) — so:
 Corrupt or foreign entries are treated as misses and overwritten, never
 trusted.
 
-Known limitation: the key deliberately does NOT include the kernel's code
-(hashing its jaxpr would require re-tracing every kernel on warm runs,
-which is exactly the work the cache exists to skip).  If you edit a
-generator's kernel body without renaming it, bump ``CACHE_SCHEMA_VERSION``
-or clear the cache directory — otherwise stale timings are reused.
+Kernel-code identity: the key includes the kernel's ``code_sig`` — a
+source-level hash of the generator body computed once at registration
+(:func:`repro.core.uipick.source_signature`), NOT a jaxpr hash (which
+would re-trace every kernel on warm runs, exactly the work the cache
+exists to skip).  Editing a generator's kernel body therefore invalidates
+that generator's entries naturally, with no global
+``CACHE_SCHEMA_VERSION`` bump; entries written under the pre-signature
+key format read as misses and self-heal.  The signature sees only the
+builder's own source: editing a shared helper a builder *calls* (e.g. a
+module-level dtype table) does NOT change any ``code_sig`` — for such
+edits, bump ``CACHE_SCHEMA_VERSION`` or clear the cache directory as
+before.
 """
 from __future__ import annotations
 
@@ -36,7 +43,10 @@ from repro.checkpoint.manager import atomic_write_json
 from repro.core.counting import FeatureCounts
 from repro.core.uipick import TimingStats
 
-CACHE_SCHEMA_VERSION = 1
+# v2: keys carry the generator-source code signature ("code"); v1 entries
+# (no code identity at all) can never be trusted against edited kernels,
+# so they read as misses and are GC'd as stale-schema
+CACHE_SCHEMA_VERSION = 2
 
 # files the cache owns: entries are always named by a 64-hex SHA-256
 # digest — anything else in the directory is not ours to count or delete
@@ -82,20 +92,24 @@ class MeasurementCache:
     """
 
     def __init__(self, root, fingerprint):
-        self.root = Path(root)
+        # expanduser: "~/.cache/..." is the documented way to share one
+        # cache between the CLI and Python callers — a literal "~" dir in
+        # the cwd must never be silently created instead
+        self.root = Path(root).expanduser()
         self.fingerprint = fingerprint
         self.hits = 0
         self.misses = 0
 
     # -- keying --------------------------------------------------------------
     def _key_payload(self, kernel_name: str, sizes: Mapping[str, int],
-                     trials: int) -> Dict[str, Any]:
+                     trials: int, code_sig: str = "") -> Dict[str, Any]:
         return {
             "schema": CACHE_SCHEMA_VERSION,
             "kernel": kernel_name,
             "sizes": {k: int(v) for k, v in sorted(sizes.items())},
             "fingerprint": self.fingerprint.id,
             "trials": int(trials),
+            "code": str(code_sig),
         }
 
     def _path(self, key_payload: Dict[str, Any]) -> Path:
@@ -105,7 +119,8 @@ class MeasurementCache:
 
     # -- store ---------------------------------------------------------------
     def get(self, kernel, trials: int) -> Optional[CacheEntry]:
-        key = self._key_payload(kernel.name, kernel.sizes, trials)
+        key = self._key_payload(kernel.name, kernel.sizes, trials,
+                                getattr(kernel, "code_sig", ""))
         path = self._path(key)
         try:
             payload = json.loads(path.read_text())
@@ -142,7 +157,8 @@ class MeasurementCache:
     def put(self, kernel, trials: int, wall_time: Optional[float],
             counts: Mapping[str, float], *,
             noise: Optional[TimingStats] = None) -> None:
-        key = self._key_payload(kernel.name, kernel.sizes, trials)
+        key = self._key_payload(kernel.name, kernel.sizes, trials,
+                                getattr(kernel, "code_sig", ""))
         payload: Dict[str, Any] = {
             "key": key,
             "wall_time": wall_time,

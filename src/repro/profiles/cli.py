@@ -10,10 +10,14 @@ for CI.  ``--zoo`` fits the whole model-zoo scope ladder over one battery
 with a held-out split (the cross-machine study artifact); ``--synthetic``
 runs against a synthetic ground-truth device instead of real hardware.
 
-Subcommands (cross-machine studies):
+Subcommands:
 
+    predict  profile + UIPiCK tags → per-kernel runtime predictions with
+             the cost-explanatory per-term breakdown; ZERO kernel
+             timings, one jit-compiled batched model evaluation
     compare  ≥2 profiles → per-model × per-variant held-out relative-error
-             report (markdown + JSON); machines must be distinct
+             report (markdown + JSON); machines must be distinct;
+             ``--sweep`` adds the per-zoo-rank accuracy/scope curve
     merge    same-machine profiles → one profile (union of fits; conflicts
              are errors); with --fleet, cross-machine → fleet bundle
     gc       evict measurement-cache entries (foreign fingerprint,
@@ -25,10 +29,15 @@ Examples:
     python -m repro.calibrate --out machine_profile.json \
         --cache-dir ~/.cache/repro-measurements --trials 8
 
+    # predict + explain runtimes from a saved profile (no measuring)
+    python -m repro.calibrate predict machine_profile.json \
+        --tags matmul_sq dtype:float32 --model ovl_flop_mem --explain 3
+
     # cross-machine study on two synthetic devices, then compare
     python -m repro.calibrate --zoo --synthetic apex --out a.json
     python -m repro.calibrate --zoo --synthetic bulk --out b.json
-    python -m repro.calibrate compare a.json b.json --report report.md
+    python -m repro.calibrate compare a.json b.json --report report.md \
+        --sweep
 """
 from __future__ import annotations
 
@@ -107,7 +116,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--expect-zero-timings", action="store_true",
                     help="exit 1 unless every kernel came from the cache "
                          "(no timing passes ran)")
+    ap.add_argument("--retime-rel-std", type=float, default=None,
+                    metavar="FRACTION",
+                    help="re-time battery rows whose relative wall-clock "
+                         "std exceeds this threshold (noisy-row "
+                         "re-measurement heuristic)")
     return ap
+
+
+def _retime_line(args, retimed) -> None:
+    if args.retime_rel_std is not None:
+        print(f"[calibrate] retimed={len(retimed)} rows above "
+              f"rel-std {args.retime_rel_std:g}"
+              + (f": {sorted(retimed)}" if retimed else ""))
 
 
 def _noise_line(table) -> str:
@@ -155,11 +176,13 @@ def _calibrate(argv: Optional[List[str]]) -> int:
                 tags=tags, output_feature=args.output_feature,
                 trials=args.trials,
                 holdout_fraction=args.holdout_fraction,
-                match=_MATCH[args.match])
+                match=_MATCH[args.match],
+                retime_rel_std=args.retime_rel_std)
         except StudyError as e:
             print(f"[calibrate] {e}", file=sys.stderr)
             return 2
         save_profile(profile, args.out)
+        _retime_line(args, profile.retimed_rows)
         print(f"[calibrate] {_noise_line(profile.holdout)}")
         for name, mf in sorted(profile.fits.items()):
             print(f"[calibrate] fit {name}: residual="
@@ -180,7 +203,9 @@ def _calibrate(argv: Optional[List[str]]) -> int:
               f"trials={args.trials} cache={args.cache_dir or 'off'}")
         table = gather_feature_table(model.all_features(), kernels,
                                      trials=args.trials, timer=timer,
-                                     cache=cache)
+                                     cache=cache,
+                                     retime_rel_std=args.retime_rel_std)
+        _retime_line(args, table.retimed_rows)
         fit = fit_model(model, table, nonneg=True)
         profile = MachineProfile(
             fingerprint=fingerprint,
@@ -207,6 +232,84 @@ def _calibrate(argv: Optional[List[str]]) -> int:
 # ---------------------------------------------------------------------------
 
 
+def _cmd_predict(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.calibrate predict",
+        description="Predict (and explain) kernel runtimes from a saved "
+                    "machine profile: UIPiCK tags select the kernels, "
+                    "features come from the jaxpr counter (or the "
+                    "measurement cache), and the whole batch is evaluated "
+                    "in ONE jit-compiled call — no kernel is ever timed.")
+    ap.add_argument("profile", help="machine-profile JSON path")
+    ap.add_argument("--tags", nargs="+", required=True,
+                    help="UIPiCK filter tags selecting kernels to predict")
+    ap.add_argument("--match", choices=sorted(_MATCH), default="intersect",
+                    help="generator tag match condition")
+    ap.add_argument("--model", default=None,
+                    help="fit name inside the profile (default: "
+                         "ovl_flop_mem, or the profile's only fit)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="measurement cache; cached counts skip jaxpr "
+                         "tracing")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write predictions (with breakdowns) as JSON")
+    ap.add_argument("--explain", type=int, default=0, metavar="N",
+                    help="print the top-N breakdown terms per kernel")
+    ap.add_argument("--strict-scope", action="store_true",
+                    help="error on kernels whose counted work the model "
+                         "has no term for")
+    ap.add_argument("--expect-zero-timings", action="store_true",
+                    help="exit 1 if any kernel timing pass ran (they "
+                         "never should during prediction)")
+    args = ap.parse_args(argv)
+
+    from repro.api import PerfSession, PredictionError
+    try:
+        session = PerfSession.open(args.profile, cache=args.cache_dir)
+    except ProfileError as e:
+        print(f"[predict] {e}", file=sys.stderr)
+        return 3
+    kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
+        args.tags, generator_match_cond=_MATCH[args.match])
+    if not kernels:
+        print(f"[predict] no measurement kernels match tags "
+              f"{args.tags!r}", file=sys.stderr)
+        return 2
+    try:
+        preds = session.predict_batch(kernels, model=args.model,
+                                      strict=args.strict_scope)
+    except PredictionError as e:
+        print(f"[predict] {e}", file=sys.stderr)
+        return 3
+    for p in preds:
+        if args.explain:
+            print(p.explain(top=args.explain))
+        else:
+            print(f"[predict] {p.kernel}: {p.seconds:.6g} s")
+    if args.json_out:
+        payload = {
+            "fingerprint": session.profile.fingerprint.id,
+            "model": preds[0].model,
+            "predictions": [p.to_dict() for p in preds],
+        }
+        Path(args.json_out).write_text(
+            json.dumps(payload, indent=2, sort_keys=True))
+        print(f"[predict] json -> {args.json_out}")
+    diag = preds[0].diagnostics
+    gmre = diag.get("holdout_gmre")
+    print(f"[predict] kernels={len(preds)} model={preds[0].model} "
+          f"held-out gmre="
+          f"{'n/a' if gmre is None else f'{gmre * 100:.2f}%'}")
+    print(f"[predict] timings_performed={session.timer.calls} "
+          f"batched_evals={session.eval_calls} "
+          f"traces={session.trace_count}")
+    if args.expect_zero_timings and session.timer.calls:
+        print(f"[predict] FAIL: prediction must never time kernels but "
+              f"{session.timer.calls} timing passes ran", file=sys.stderr)
+        return 1
+    return 0
+
+
 def _cmd_compare(argv: List[str]) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.calibrate compare",
@@ -219,9 +322,18 @@ def _cmd_compare(argv: List[str]) -> int:
                     help="markdown report destination (default: stdout)")
     ap.add_argument("--json", dest="json_out", default=None,
                     help="JSON report destination")
+    ap.add_argument("--sweep", action="store_true",
+                    help="append the scope-vs-accuracy curve (held-out "
+                         "gmre per zoo rank) to the report and JSON")
     args = ap.parse_args(argv)
 
-    from repro.studies import StudyError, compare_profiles, load_profiles_any
+    from repro.studies import (
+        StudyError,
+        compare_profiles,
+        load_profiles_any,
+        scope_accuracy_sweep,
+        sweep_to_markdown,
+    )
     try:
         profiles = [p for path in args.profiles
                     for p in load_profiles_any(path)]
@@ -232,20 +344,35 @@ def _cmd_compare(argv: List[str]) -> int:
         print(f"[compare] {e}", file=sys.stderr)
         return 3
     md = report.to_markdown()
+    sweep = None
+    if args.sweep:
+        sweep = scope_accuracy_sweep(report)
+        md = md + "\n" + sweep_to_markdown(sweep)
     if args.report:
         Path(args.report).write_text(md)
         print(f"[compare] report -> {args.report}")
     else:
         print(md)
     if args.json_out:
+        payload = report.to_json_dict()
+        if sweep is not None:
+            payload["sweep"] = sweep["sweep"]
         Path(args.json_out).write_text(
-            json.dumps(report.to_json_dict(), indent=2, sort_keys=True))
+            json.dumps(payload, indent=2, sort_keys=True))
         print(f"[compare] json -> {args.json_out}")
     for fp in report.machines:
         summary = " ".join(f"{m}={report.summary[fp][m] * 100:.2f}%"
                            for m in report.model_names
                            if m in report.summary[fp])
         print(f"[compare] {fp}: {summary}")
+    if sweep is not None:
+        for row in sweep["sweep"]:
+            rank = row["scope_rank"]
+            fleet = row["fleet_gmre"]
+            print(f"[compare] sweep rank="
+                  f"{'-' if rank is None else rank} {row['model']} "
+                  f"params={row['n_params']} fleet gmre="
+                  f"{'n/a' if fleet is None else f'{fleet * 100:.2f}%'}")
     return 0
 
 
@@ -311,7 +438,8 @@ def _cmd_gc(argv: List[str]) -> int:
     return 0
 
 
-_SUBCOMMANDS = {"compare": _cmd_compare, "merge": _cmd_merge, "gc": _cmd_gc}
+_SUBCOMMANDS = {"predict": _cmd_predict, "compare": _cmd_compare,
+                "merge": _cmd_merge, "gc": _cmd_gc}
 
 
 def main(argv: Optional[List[str]] = None) -> int:

@@ -91,6 +91,21 @@ class MachineProfile:
     # Optional — profiles written before the study subsystem load fine.
     holdout: Optional[FeatureTable] = None
 
+    @property
+    def fit_names(self) -> List[str]:
+        return sorted(self.fits)
+
+    def get_fit(self, name: str) -> ModelFit:
+        """The stored fit of the given NAME (zoo name / ``--name``); a
+        missing name raises :class:`ProfileError` listing what the profile
+        does carry, so facade callers can surface actionable errors."""
+        if name not in self.fits:
+            raise ProfileError(
+                f"profile for {self.fingerprint.id!r} has no fit named "
+                f"{name!r}; it carries {self.fit_names} — recalibrate with "
+                f"the model you want to predict with")
+        return self.fits[name]
+
     def fit_for(self, model: Model) -> ModelFit:
         """The stored fit matching ``model`` (by content signature)."""
         sig = model.signature()

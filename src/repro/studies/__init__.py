@@ -19,6 +19,8 @@ from repro.studies.study import (
     merge_any,
     profile_accuracy,
     run_study,
+    scope_accuracy_sweep,
+    sweep_to_markdown,
 )
 from repro.studies.zoo import (
     LIN_FLOP,
@@ -49,6 +51,8 @@ __all__ = [
     "merge_any",
     "profile_accuracy",
     "run_study",
+    "scope_accuracy_sweep",
+    "sweep_to_markdown",
     "zoo_entry",
     "zoo_models",
 ]

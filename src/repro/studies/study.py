@@ -71,9 +71,15 @@ def run_study(
     trials: int = 8,
     holdout_fraction: float = 0.25,
     match: MatchCondition = MatchCondition.INTERSECT,
+    retime_rel_std: Optional[float] = None,
 ) -> MachineProfile:
     """One machine's full study: gather once, fit the whole zoo, persist
-    fits + held-out rows into a single profile."""
+    fits + held-out rows into a single profile.
+
+    ``retime_rel_std`` forwards the noisy-row re-measurement heuristic to
+    the gather (see :func:`gather_feature_table`); the names of re-timed
+    rows ride on the returned profile as the transient attribute
+    ``retimed_rows`` (observability — not serialized)."""
     entries = list(entries)
     if not entries:
         raise StudyError("a study needs at least one zoo entry")
@@ -97,7 +103,8 @@ def run_study(
                 features.append(f)
 
     table = gather_feature_table(features, kernels, trials=trials,
-                                 timer=timer, cache=cache)
+                                 timer=timer, cache=cache,
+                                 retime_rel_std=retime_rel_std)
     train, holdout = holdout_split(table, holdout_fraction=holdout_fraction)
     widest = max(len(m.param_names) for m in models.values())
     if len(train) < widest:
@@ -107,13 +114,15 @@ def run_study(
             f"'converge' to arbitrary values; widen the battery tags")
     fits = fit_models(models, train,
                       nonneg={e.name: e.nonneg for e in entries})
-    return MachineProfile(
+    profile = MachineProfile(
         fingerprint=fingerprint,
         fits={name: ModelFit.from_fit(models[name], fit)
               for name, fit in fits.items()},
         trials=trials,
         kernel_names=[k.name for k in kernels],
         holdout=holdout)
+    profile.retimed_rows = list(table.retimed_rows)
+    return profile
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +251,64 @@ def compare_profiles(profiles: Sequence[MachineProfile]) -> StudyReport:
         report.params[fp] = {name: dict(mf.params)
                              for name, mf in sorted(p.fits.items())}
     return report
+
+
+# ---------------------------------------------------------------------------
+# Scope-vs-accuracy tradeoff curve (the paper's central mechanism, §8)
+# ---------------------------------------------------------------------------
+
+
+def scope_accuracy_sweep(report: StudyReport) -> Dict[str, Any]:
+    """Per-zoo-rank held-out accuracy: the paper's accuracy/scope tradeoff
+    as one structured artifact.
+
+    Rows are ordered by model scope (zoo ``scope_rank``; fits outside the
+    zoo sort last by name) and carry, per model form: its scope rank, its
+    parameter count (the scope proxy you pay for), each machine's held-out
+    gmre, and the fleet-wide geometric mean — so ``compare --sweep`` can
+    answer "what does one more term buy, and what does it cost?" in one
+    command.
+    """
+    from repro.studies.zoo import MODEL_ZOO
+
+    rank_of = {e.name: e.scope_rank for e in MODEL_ZOO}
+    models = sorted(report.model_names,
+                    key=lambda n: (rank_of.get(n, len(MODEL_ZOO)), n))
+    rows: List[Dict[str, Any]] = []
+    for name in models:
+        per_machine = {fp: report.summary[fp][name]
+                       for fp in report.machines
+                       if name in report.summary.get(fp, {})}
+        vals = list(per_machine.values())
+        n_params = max((len(report.params.get(fp, {}).get(name, {}))
+                        for fp in report.machines), default=0)
+        rows.append({
+            "model": name,
+            "scope_rank": rank_of.get(name),
+            "n_params": n_params,
+            "per_machine": per_machine,
+            "fleet_gmre": gmre_of({fp: v for fp, v
+                                   in per_machine.items()}) if vals
+            else None,
+        })
+    return {"fleet_schema_version": FLEET_SCHEMA_VERSION,
+            "machines": report.machines, "sweep": rows}
+
+
+def sweep_to_markdown(sweep: Dict[str, Any]) -> str:
+    machines = list(sweep["machines"])
+    lines = ["## Scope vs accuracy (held-out gmre by zoo rank)", ""]
+    header = ["rank", "model", "params", *machines, "fleet"]
+    lines.append("| " + " | ".join(header) + " |")
+    lines.append("|---" * len(header) + "|")
+    for row in sweep["sweep"]:
+        rank = "—" if row["scope_rank"] is None else str(row["scope_rank"])
+        cells = [rank, row["model"], str(row["n_params"])]
+        cells += [_pct(row["per_machine"].get(fp)) for fp in machines]
+        cells.append(_pct(row["fleet_gmre"]))
+        lines.append("| " + " | ".join(cells) + " |")
+    lines.append("")
+    return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------

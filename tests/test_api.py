@@ -1,0 +1,408 @@
+"""The ``repro.api`` facade: one object from kernel → counts → prediction.
+
+Pins the PR's acceptance properties:
+* ``predict_batch`` over ≥100 kernels on a warm profile performs ZERO
+  kernel timings and exactly ONE jit-compiled batched model evaluation
+  (injectable ``CountingTimer`` + the session's trace-count probe),
+* every ``Prediction`` carries a per-term cost breakdown that sums to the
+  predicted seconds within 1e-6 relative,
+* facade error paths are typed (``PredictionError``/``ProfileError``),
+  never ``KeyError``,
+* deprecation shims keep old entry points alive and warn exactly once.
+"""
+import json
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import deprecation
+from repro.api import DEFAULT_MODEL, PerfSession, Prediction, PredictionError
+from repro.api.errors import suggest_calibration_tags
+from repro.core.calibrate import FitResult
+from repro.core.model import Model
+from repro.core.uipick import (
+    ALL_GENERATORS,
+    CountingTimer,
+    KernelCollection,
+    MatchCondition,
+    MeasurementKernel,
+    gather_feature_values,
+)
+from repro.profiles import (
+    DeviceFingerprint,
+    MachineProfile,
+    MeasurementCache,
+    ModelFit,
+    ProfileError,
+    save_profile,
+)
+from repro.profiles.cli import main as cli_main
+from repro.studies import STUDY_SMOKE_TAGS, scope_accuracy_sweep
+from repro.testing.synthdev import fleet_device
+
+FP = DeviceFingerprint(platform="synth", device_kind="api-test", n_devices=1)
+
+OVL_EXPR = ("overlap2(p_madd * f_op_float32_madd, "
+            "p_mem * (f_mem_contig_float32_load "
+            "+ f_mem_contig_float32_store + f_op_float32_add), p_edge) "
+            "+ p_launch * f_sync_launch_kernel")
+PARAMS = {"p_madd": 5e-11, "p_mem": 4e-10, "p_launch": 3e-6, "p_edge": 40.0}
+
+
+def _profile(expr=OVL_EXPR, params=PARAMS, name="ovl_flop_mem",
+             fingerprint=FP, trials=4):
+    model = Model("f_wall_time_cpu_host", expr)
+    fit = FitResult(params=dict(params), residual_norm=0.0, iterations=1,
+                    converged=True)
+    return MachineProfile(
+        fingerprint=fingerprint,
+        fits={name: ModelFit.from_fit(model, fit)},
+        trials=trials)
+
+
+def _tiny_kernels(n):
+    kernels = []
+    for i in range(n):
+        size = 8 * (i + 1)
+
+        def make_args(s=size):
+            return (jnp.ones((s,), jnp.float32),)
+
+        kernels.append(MeasurementKernel(
+            name=f"tiny_{size}", fn=lambda x: x * 2.0 + 1.0,
+            make_args=make_args, tags={"n": size}, sizes={"n": size}))
+    return kernels
+
+
+# ---------------------------------------------------------------------------
+# acceptance: zero timings, one batched evaluation, exact breakdowns
+# ---------------------------------------------------------------------------
+
+
+def test_predict_batch_100_kernels_zero_timings_one_compiled_eval():
+    session = PerfSession.open(_profile(),
+                               timer=CountingTimer(lambda k, t: 0.125))
+    kernels = _tiny_kernels(120)
+    preds = session.predict_batch(kernels)
+
+    assert len(preds) == 120
+    assert session.timer.calls == 0             # prediction NEVER times
+    assert session.eval_calls == 1              # one batched dispatch
+    assert session.trace_count == 1             # one jit compilation
+    for p in preds:
+        total = sum(p.breakdown.values())
+        assert abs(total - p.seconds) <= 1e-6 * max(abs(p.seconds), 1e-300)
+        assert p.seconds > 0                    # p_launch floor
+    # a second same-shape batch reuses the compiled evaluator: no retrace
+    session.predict_batch(kernels)
+    assert session.eval_calls == 2 and session.trace_count == 1
+
+
+def test_breakdown_matches_full_model_evaluation():
+    session = PerfSession.open(_profile())
+    kernels = _tiny_kernels(7)
+    preds = session.predict_batch(kernels)
+    mf = session.profile.fits["ovl_flop_mem"]
+    m = mf.model()
+    F = m.align([k.counts() for k in kernels])
+    full = np.asarray(m.batched_eval(
+        jnp.asarray([mf.params[n] for n in m.param_names], jnp.float32),
+        jnp.asarray(F, jnp.float32)), np.float64)
+    for p, direct in zip(preds, full):
+        assert p.seconds == pytest.approx(float(direct), rel=1e-5)
+
+
+def test_overlap_attribution_splits_and_sums_exactly():
+    session = PerfSession.open(_profile())
+    pred = session.predict(lambda a, b: a @ b,
+                           jnp.zeros((64, 64), jnp.float32),
+                           jnp.zeros((64, 64), jnp.float32))
+    labels = list(pred.breakdown)
+    assert any(lbl.startswith("overlap2[p_madd") for lbl in labels)
+    assert any(lbl.startswith("overlap2[p_mem") for lbl in labels)
+    assert any("p_launch" in lbl for lbl in labels)
+    assert sum(pred.breakdown.values()) == pytest.approx(pred.seconds,
+                                                         rel=1e-9, abs=0)
+    # a matmul's time must be attributed dominantly to the madd component
+    madd = next(v for lbl, v in pred.breakdown.items()
+                if lbl.startswith("overlap2[p_madd"))
+    assert madd > 0.5 * pred.seconds
+
+
+def test_predict_single_equals_batch_row():
+    session = PerfSession.open(_profile())
+    (k,) = _tiny_kernels(1)
+    single = session.predict(k)
+    (batched,) = session.predict_batch([k])
+    assert single.seconds == batched.seconds
+    assert single.breakdown == batched.breakdown
+    assert single.kernel == "tiny_8"
+
+
+def test_predict_accepts_fn_args_pairs_and_callables():
+    session = PerfSession.open(_profile())
+
+    def my_kernel(x):
+        return x * 3.0
+
+    preds = session.predict_batch(
+        [(my_kernel, (jnp.ones((16,), jnp.float32),)),
+         lambda: jnp.zeros((4,), jnp.float32) + 1.0])
+    assert preds[0].kernel == "my_kernel[0]"
+    assert preds[1].kernel == "kernel[1]"
+    named = session.predict(my_kernel, jnp.ones((16,), jnp.float32),
+                            name="scaled16")
+    assert named.kernel == "scaled16"
+    # x * 3.0 over 16 elements: counted, but outside the ovl model's scope
+    assert named.unmodeled["f_op_float32_mul"] == 16.0
+
+
+def test_prediction_to_dict_and_explain():
+    session = PerfSession.open(_profile())
+    pred = session.predict(*_tiny_kernels(1))
+    d = pred.to_dict()
+    assert json.dumps(d)                        # JSON-serializable
+    assert d["seconds"] == pred.seconds
+    text = pred.explain(top=2)
+    assert "tiny_8" in text and "%" in text
+    assert isinstance(pred, Prediction)
+
+
+# ---------------------------------------------------------------------------
+# facade error paths (typed, actionable)
+# ---------------------------------------------------------------------------
+
+
+def test_open_rejects_foreign_fingerprint_profile(tmp_path):
+    path = save_profile(_profile(), tmp_path / "prof.json")
+    other = DeviceFingerprint(platform="synth", device_kind="elsewhere",
+                              n_devices=2)
+    with pytest.raises(ProfileError, match="api-test"):
+        PerfSession.open(path, expected_fingerprint=other)
+    with pytest.raises(ProfileError):
+        PerfSession.open(path, expected_fingerprint="local")
+    # without an expectation, cross-machine prediction is the use case
+    assert PerfSession.open(path).profile.fingerprint == FP
+
+
+def test_missing_model_is_a_typed_error_listing_available_fits():
+    session = PerfSession.open(_profile())
+    with pytest.raises(PredictionError, match="ovl_flop_mem"):
+        session.predict(*_tiny_kernels(1), model="nope")
+
+
+def test_default_model_resolution():
+    # profile with one non-default fit: resolves to it
+    single = PerfSession.open(_profile(
+        expr="p_launch * f_sync_launch_kernel",
+        params={"p_launch": 1e-6}, name="base"))
+    assert single.predict(*_tiny_kernels(1)).model == "base"
+    # two fits, none the default: must name one
+    prof = _profile()
+    prof.fits["other"] = prof.fits[DEFAULT_MODEL]
+    prof.fits = {"a": prof.fits[DEFAULT_MODEL], "b": prof.fits["other"]}
+    ambiguous = PerfSession.open(prof)
+    with pytest.raises(PredictionError, match="pass model="):
+        ambiguous.predict(*_tiny_kernels(1))
+
+
+def test_strict_scope_names_feature_and_calibration_tags():
+    session = PerfSession.open(_profile(
+        expr="p_madd * f_op_float32_madd "
+             "+ p_launch * f_sync_launch_kernel",
+        params={"p_madd": 5e-11, "p_launch": 3e-6}, name="lin_flop"))
+    (k,) = _tiny_kernels(1)                     # counts mul + add work
+    with pytest.raises(PredictionError, match="f_op_float32_") as ei:
+        session.predict(k, model="lin_flop", strict=True)
+    msg = str(ei.value)
+    assert "tiny_8" in msg and "lin_flop" in msg
+    assert "flops_madd_pattern" in msg          # the tags that calibrate it
+    # non-strict: same work lands in diagnostics instead
+    pred = session.predict(k, model="lin_flop")
+    assert "f_op_float32_mul" in pred.unmodeled
+
+
+def test_corrupted_fit_params_raise_prediction_error_not_keyerror():
+    prof = _profile()
+    del prof.fits["ovl_flop_mem"].fit.params["p_mem"]
+    session = PerfSession.open(prof)
+    with pytest.raises(PredictionError, match="p_mem"):
+        session.predict(*_tiny_kernels(1))
+
+
+def test_suggest_calibration_tags_classes():
+    assert "matmul_sq" in suggest_calibration_tags("f_op_float32_madd")
+    assert "pattern:gather" in \
+        suggest_calibration_tags("f_mem_gather_float32_load")
+    assert "empty_kernel" in suggest_calibration_tags("f_sync_launch_kernel")
+    assert suggest_calibration_tags("f_coll_psum_bytes") == []
+
+
+# ---------------------------------------------------------------------------
+# open(device): calibrate on demand, persist, reopen warm
+# ---------------------------------------------------------------------------
+
+
+def test_open_device_calibrates_then_reopen_predicts_truth(tmp_path):
+    device = fleet_device("citra")              # noiseless ground truth
+    session = PerfSession.open(device, tags=STUDY_SMOKE_TAGS, trials=3,
+                               cache=tmp_path / "cache",
+                               save_to=tmp_path / "prof.json")
+    assert session.calibration["timings"] > 0
+    assert session.calibration["source"].startswith("calibrated:")
+
+    warm = PerfSession.open(tmp_path / "prof.json",
+                            cache=tmp_path / "cache",
+                            expected_fingerprint=device.fingerprint)
+    kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
+        ["matmul_sq", "dtype:float32", "prefetch:False", "tile:16",
+         "n:256,384,512"], generator_match_cond=MatchCondition.INTERSECT)
+    preds = warm.predict_batch(kernels, model="ovl_flop_mem")
+    assert warm.timer.calls == 0
+    assert warm.eval_calls == 1
+    for k, p in zip(kernels, preds):
+        assert p.seconds == pytest.approx(device.true_time(k), rel=1e-3)
+        assert p.diagnostics["converged"]
+        assert p.diagnostics["holdout_gmre"] is not None
+
+
+def test_curated_top_level_surface():
+    import repro
+
+    assert repro.PerfSession is PerfSession
+    assert repro.Model is Model
+    assert "PerfSession" in repro.__all__ and "run_study" in repro.__all__
+    assert repro.__version__
+    with pytest.raises(AttributeError, match="no attribute"):
+        repro.does_not_exist
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old entry points keep working, warn exactly once
+# ---------------------------------------------------------------------------
+
+
+def test_gather_feature_values_shim_warns_once_and_works():
+    deprecation.reset_warnings("gather_feature_values")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rows = gather_feature_values(
+            ["f_op_float32_mul"], _tiny_kernels(2),
+            timer=CountingTimer(lambda k, t: 0.125))
+        gather_feature_values(
+            ["f_op_float32_mul"], _tiny_kernels(2),
+            timer=CountingTimer(lambda k, t: 0.125))
+    deps = [w for w in caught
+            if issubclass(w.category, DeprecationWarning)
+            and "gather_feature_values" in str(w.message)]
+    assert len(deps) == 1                       # exactly once per process
+    assert rows[0]["f_op_float32_mul"] == 8.0   # and still correct
+
+
+def test_eval_with_counts_shim_warns_once_and_works():
+    deprecation.reset_warnings("Model.eval_with_counts")
+    m = Model("f_wall_time_cpu_host", "p_a * f_x")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        v1 = m.eval_with_counts({"p_a": 2.0}, {"f_x": 3.0})
+        v2 = m.eval_with_counts({"p_a": 2.0}, {"f_x": 5.0})
+    deps = [w for w in caught
+            if issubclass(w.category, DeprecationWarning)
+            and "eval_with_counts" in str(w.message)]
+    assert len(deps) == 1
+    assert (v1, v2) == (6.0, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# CLI: predict subcommand
+# ---------------------------------------------------------------------------
+
+
+CAL_ARGS = ["--tags", "empty_kernel", "nelements:16,1024",
+            "--match", "intersect",
+            "--expr", "p_launch * f_sync_launch_kernel",
+            "--trials", "2"]
+
+
+def test_cli_predict_zero_timings_and_json(tmp_path):
+    prof = tmp_path / "prof.json"
+    assert cli_main(CAL_ARGS + ["--out", str(prof)]) == 0
+    out = tmp_path / "preds.json"
+    rc = cli_main(["predict", str(prof),
+                   "--tags", "empty_kernel", "nelements:16,1024",
+                   "--expect-zero-timings", "--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert len(payload["predictions"]) == 2
+    for p in payload["predictions"]:
+        assert sum(p["breakdown"].values()) == \
+            pytest.approx(p["seconds"], rel=1e-9)
+
+
+def test_cli_predict_error_exit_codes(tmp_path):
+    prof = tmp_path / "prof.json"
+    assert cli_main(CAL_ARGS + ["--out", str(prof)]) == 0
+    # unknown model name → 3
+    assert cli_main(["predict", str(prof), "--tags", "empty_kernel",
+                     "--model", "nope"]) == 3
+    # no kernels matched → 2
+    assert cli_main(["predict", str(prof), "--tags", "no_such_generator",
+                     "--match", "identical"]) == 2
+    # unreadable profile → 3
+    assert cli_main(["predict", str(tmp_path / "missing.json"),
+                     "--tags", "empty_kernel"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# scope-vs-accuracy sweep
+# ---------------------------------------------------------------------------
+
+
+def test_scope_accuracy_sweep_orders_by_rank_and_averages():
+    from repro.studies import StudyReport
+
+    report = StudyReport(
+        per_variant={"m1": {}, "m2": {}},
+        summary={"m1": {"ovl_flop_mem": 0.04, "lin_flop": 0.01,
+                        "custom": 0.5},
+                 "m2": {"ovl_flop_mem": 0.01, "lin_flop": 0.04}},
+        params={"m1": {"ovl_flop_mem": {"p_a": 1, "p_b": 2, "p_c": 3,
+                                        "p_d": 4},
+                       "lin_flop": {"p_a": 1, "p_b": 2}, "custom": {}},
+                "m2": {"ovl_flop_mem": {"p_a": 1, "p_b": 2, "p_c": 3,
+                                        "p_d": 4},
+                       "lin_flop": {"p_a": 1, "p_b": 2}}})
+    report.per_variant = {"m1": {n: {} for n in report.summary["m1"]},
+                          "m2": {n: {} for n in report.summary["m2"]}}
+    sweep = scope_accuracy_sweep(report)
+    names = [r["model"] for r in sweep["sweep"]]
+    assert names == ["lin_flop", "ovl_flop_mem", "custom"]
+    ranks = [r["scope_rank"] for r in sweep["sweep"]]
+    assert ranks == [0, 2, None]                # non-zoo fits sort last
+    lin = sweep["sweep"][0]
+    assert lin["n_params"] == 2
+    assert lin["fleet_gmre"] == pytest.approx(np.exp(np.mean(
+        np.log([0.01, 0.04]))))
+    custom = sweep["sweep"][2]
+    assert custom["per_machine"] == {"m1": 0.5}
+
+
+def test_cli_compare_sweep_emits_json_and_markdown(tmp_path):
+    for name in ("apex", "bulk"):
+        rc = cli_main(["--zoo", "--smoke", "--synthetic", name,
+                       "--synthetic-noise", "0.02", "--trials", "2",
+                       "--out", str(tmp_path / f"{name}.json")])
+        assert rc == 0
+    md = tmp_path / "report.md"
+    js = tmp_path / "report.json"
+    rc = cli_main(["compare", str(tmp_path / "apex.json"),
+                   str(tmp_path / "bulk.json"), "--sweep",
+                   "--report", str(md), "--json", str(js)])
+    assert rc == 0
+    assert "Scope vs accuracy" in md.read_text()
+    payload = json.loads(js.read_text())
+    assert [r["model"] for r in payload["sweep"]] == \
+        ["lin_flop", "lin_flop_mem", "ovl_flop_mem"]
+    assert all(r["fleet_gmre"] is not None for r in payload["sweep"])

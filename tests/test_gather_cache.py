@@ -281,3 +281,162 @@ def test_cli_no_matching_kernels_is_an_error(tmp_path):
                          "--match", "identical",
                          "--out", str(tmp_path / "p.json")])
     assert rc == 2
+
+
+# ---------------------------------------------------------------------------
+# kernel-code signatures in cache keys (generator edits invalidate entries)
+# ---------------------------------------------------------------------------
+
+
+def _sig_kernels(n, code_sig):
+    kernels = _tiny_kernels(n)
+    for k in kernels:
+        k.code_sig = code_sig
+    return kernels
+
+
+def test_code_signature_change_invalidates_cache_entries(tmp_path):
+    """Editing a generator body (→ new source signature) must miss the old
+    entries; the same signature stays a hit."""
+    cache = MeasurementCache(tmp_path, FP)
+    gather_feature_table(FEATURES, _sig_kernels(2, "sig_v1"), trials=4,
+                         timer=_fake_timer(), cache=cache)
+    same = _fake_timer()
+    gather_feature_table(FEATURES, _sig_kernels(2, "sig_v1"), trials=4,
+                         timer=same, cache=MeasurementCache(tmp_path, FP))
+    assert same.calls == 0
+    edited = _fake_timer()
+    gather_feature_table(FEATURES, _sig_kernels(2, "sig_v2"), trials=4,
+                         timer=edited, cache=MeasurementCache(tmp_path, FP))
+    assert edited.calls == 2                    # every edited kernel re-timed
+
+
+def test_old_format_entry_without_code_key_reads_as_miss(tmp_path):
+    """Entries written before code signatures existed (key lacks "code")
+    must read as misses, never be trusted."""
+    from repro.checkpoint.manager import atomic_write_json
+
+    cache = MeasurementCache(tmp_path, FP)
+    (k,) = _tiny_kernels(1)
+    old_key = {kk: v for kk, v in
+               cache._key_payload(k.name, k.sizes, 4, k.code_sig).items()
+               if kk != "code"}
+    atomic_write_json(cache._path(old_key), {
+        "key": old_key, "wall_time": 0.5,
+        "counts": {"f_op_float32_mul": 8.0, "f_op_float32_add": 8.0}})
+    timer = _fake_timer()
+    table = gather_feature_table(FEATURES, [k], trials=4, timer=timer,
+                                 cache=cache)
+    assert timer.calls == 1                     # stale format ignored
+    assert table.values[0, 0] == 0.125          # fresh measurement used
+
+
+def test_generators_compute_and_propagate_code_signatures():
+    from repro.core.uipick import MATMUL_SQ, source_signature
+
+    assert MATMUL_SQ.code_sig                   # registration-time hash
+    kernels = list(MATMUL_SQ.variants(
+        {"n": (256,), "dtype": ("float32",), "prefetch": (False,),
+         "tile": (16,)}))
+    assert kernels and all(k.code_sig == MATMUL_SQ.code_sig
+                           for k in kernels)
+
+    def f1(x):
+        return x + 1
+
+    def f2(x):
+        return x + 2
+
+    assert source_signature(f1) != source_signature(f2)
+    ns = {}
+    exec("def no_source(x):\n    return x", ns)   # no retrievable source
+    assert source_signature(ns["no_source"]) == ""
+    assert source_signature(f1) == source_signature(f1)  # deterministic
+
+
+# ---------------------------------------------------------------------------
+# noisy-row re-measurement heuristic (retime_rel_std)
+# ---------------------------------------------------------------------------
+
+
+def _flaky_then_steady_timer():
+    """First pass per kernel: 40% rel std; later passes: 0.8%."""
+    seen = {}
+
+    def timer(k, trials):
+        n = seen.get(k.name, 0)
+        seen[k.name] = n + 1
+        std = 0.05 if n == 0 else 0.001
+        return TimingStats(median=0.125, std=std, min=0.11)
+
+    return CountingTimer(timer)
+
+
+def test_retime_heuristic_retimes_noisy_rows_and_keeps_steadier():
+    timer = _flaky_then_steady_timer()
+    table = gather_feature_table(FEATURES, _tiny_kernels(3), trials=4,
+                                 timer=timer, retime_rel_std=0.1)
+    assert timer.calls == 6                     # one extra pass per row
+    assert sorted(table.retimed_rows) == sorted(table.row_names)
+    for d in table.row_noise.values():
+        assert d["std"] == 0.001                # the steadier pass won
+
+
+def test_retime_ignores_timers_without_spread_metadata():
+    """A bare-seconds timer reports no std: rows are not retime-eligible
+    (unknown spread must not read as infinitely noisy)."""
+    timer = _fake_timer()
+    table = gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                                 timer=timer, retime_rel_std=0.1)
+    assert timer.calls == 2                     # exactly one pass per row
+    assert table.retimed_rows == []
+
+
+def test_retime_below_threshold_is_a_noop():
+    timer = _flaky_then_steady_timer()
+    table = gather_feature_table(FEATURES, _tiny_kernels(3), trials=4,
+                                 timer=timer, retime_rel_std=0.5)
+    assert timer.calls == 3
+    assert table.retimed_rows == []
+
+
+def test_retime_keeps_original_when_fresh_pass_is_noisier():
+    def timer_fn(k, trials):
+        return TimingStats(median=0.125, std=0.05, min=0.11)
+
+    timer = CountingTimer(timer_fn)
+    table = gather_feature_table(FEATURES, _tiny_kernels(1), trials=4,
+                                 timer=timer, retime_rel_std=0.1)
+    assert timer.calls == 2                     # retried once...
+    assert table.retimed_rows == ["tiny_8"]
+    assert table.values[0, 0] == 0.125          # ...but nothing degraded
+
+
+def test_retime_applies_to_cached_rows_and_updates_cache(tmp_path):
+    """A noisy CACHED row is the whole point: the warm run re-times it and
+    the steadier measurement replaces the entry."""
+    noisy = CountingTimer(
+        lambda k, t: TimingStats(median=0.2, std=0.08, min=0.1))
+    gather_feature_table(FEATURES, _tiny_kernels(2), trials=4, timer=noisy,
+                         cache=MeasurementCache(tmp_path, FP))
+
+    steady = CountingTimer(
+        lambda k, t: TimingStats(median=0.125, std=0.001, min=0.124))
+    table = gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                                 timer=steady,
+                                 cache=MeasurementCache(tmp_path, FP),
+                                 retime_rel_std=0.1)
+    assert steady.calls == 2                    # re-timed despite warm cache
+    assert list(table.values[:, 0]) == [0.125, 0.125]
+
+    # the cache now carries the steadier measurement: a later plain gather
+    # is fully warm AND below the threshold
+    after = CountingTimer(
+        lambda k, t: TimingStats(median=0.3, std=0.09, min=0.2))
+    table2 = gather_feature_table(FEATURES, _tiny_kernels(2), trials=4,
+                                  timer=after,
+                                  cache=MeasurementCache(tmp_path, FP),
+                                  retime_rel_std=0.1)
+    assert after.calls == 0
+    assert table2.retimed_rows == []
+    assert list(table2.values[:, 0]) == [0.125, 0.125]
