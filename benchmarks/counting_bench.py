@@ -1,0 +1,153 @@
+"""Counting-engine benchmark: amortized symbolic counts vs per-size tracing.
+
+The paper's amortization claim is that operation counts are gathered
+symbolically once and re-evaluated "in microseconds for any problem
+size".  This bench pins the repo's implementation of that claim:
+
+* **count-matrix construction** — filling a symbolic kernel family's
+  count rows over a full size sweep, cold trace-per-size
+  (``jax.make_jaxpr`` + jaxpr walk at every size point) vs the count
+  engine (minimal probe grid + vectorized ``Poly.eval_batch``), plus the
+  warm-engine path (zero traces — pure polynomial evaluation);
+* **serving dedup** — ``predict_batch`` over a batch with heavy
+  duplication: every item distinct (no dedup possible) vs the same batch
+  as 8 unique kernels × repeats (counted once, rows broadcast).
+
+Rows follow the suite convention ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.api import PerfSession
+from repro.core.calibrate import FitResult
+from repro.core.countengine import CountEngine
+from repro.core.counting import count_fn
+from repro.core.uipick import FamilySpec, Generator, MeasurementKernel
+from repro.profiles import DeviceFingerprint, MachineProfile, ModelFit
+from repro.studies.zoo import OVL_FLOP_MEM
+
+N_SIZES = 24                      # size sweep for the count-matrix bench
+BATCH = 256                       # serving batch size
+UNIQUE = 8                        # distinct kernels in the deduped batch
+
+
+def _build_mm(*, n: int) -> MeasurementKernel:
+    def fn(a, b):
+        return jnp.tanh(a @ b) + a
+
+    def make_args():
+        x = jnp.ones((n, n), jnp.float32)
+        return x, x
+
+    return MeasurementKernel(name=f"mm_{n}", fn=fn, make_args=make_args,
+                             tags={"n": n}, sizes={"n": n})
+
+
+def _family_kernels(sizes: List[int]) -> List[MeasurementKernel]:
+    """One symbolic matmul family across a size sweep — degree-3 counts,
+    reconstructed from 4 probe traces."""
+    gen = Generator("bench_matmul", frozenset({"bench"}),
+                    arg_space=dict(n=tuple(sizes)), build=_build_mm,
+                    family=FamilySpec(var_degrees={"n": 3}))
+    return list(gen.variants({}))
+
+
+def _profile() -> MachineProfile:
+    model = OVL_FLOP_MEM.model()
+    fit = FitResult(params={"p_madd": 5e-11, "p_mem": 4e-10,
+                            "p_launch": 3e-6, "p_edge": 40.0},
+                    residual_norm=0.0, iterations=1, converged=True)
+    return MachineProfile(
+        fingerprint=DeviceFingerprint(platform="synth",
+                                      device_kind="counting-bench",
+                                      n_devices=1),
+        fits={OVL_FLOP_MEM.name: ModelFit.from_fit(model, fit)},
+        trials=3)
+
+
+def _serving_kernels(n_unique: int, total: int) -> List[MeasurementKernel]:
+    """``total`` items drawn from ``n_unique`` distinct kernels, each with
+    a stable content signature (so the dedup path can collapse them)."""
+    unique = []
+    for i in range(n_unique):
+        size = 16 * (i + 1)
+
+        def make_args(s=size):
+            return (jnp.ones((s,), jnp.float32),)
+
+        unique.append(MeasurementKernel(
+            name=f"serve_{size}", fn=lambda x: x * 2.0 + 1.0,
+            make_args=make_args, tags={"n": size}, sizes={"n": size},
+            code_sig=f"counting_bench_v1_{i}"))
+    return [unique[i % n_unique] for i in range(total)]
+
+
+def counting_rows() -> List[str]:
+    rows: List[str] = []
+
+    # -- count-matrix construction: trace-per-size vs symbolic family ----
+    sizes = [16 * (i + 1) for i in range(N_SIZES)]
+    kernels = _family_kernels(sizes)
+    # MATMUL_SQ's arg space doesn't constrain probe sizes, but warm the
+    # jax import path so the cold comparison is counting work only
+    count_fn(kernels[0].fn, *kernels[0].make_args())
+
+    t0 = time.perf_counter()
+    traced = [count_fn(k.fn, *k.make_args()) for k in kernels]
+    t_trace = (time.perf_counter() - t0) / len(kernels)
+
+    cold = CountEngine()
+    t0 = time.perf_counter()
+    cold_rows = cold.counts_batch(kernels)
+    t_cold = (time.perf_counter() - t0) / len(kernels)
+
+    traces_after_cold = cold.trace_count
+    t0 = time.perf_counter()
+    warm_rows = cold.counts_batch(kernels)   # family now in-process
+    t_warm = (time.perf_counter() - t0) / len(kernels)
+
+    for direct, row in zip(traced, cold_rows):
+        for fid, v in direct.items():
+            assert abs(row[fid] - v) <= 1e-6 * max(abs(v), 1.0), fid
+    assert cold.trace_count == traces_after_cold  # warm pass: zero traces
+    assert [dict(r) for r in warm_rows] == [dict(r) for r in cold_rows]
+
+    rows += [
+        f"counting.trace_per_size_us,{t_trace * 1e6:.1f},"
+        f"sizes={len(sizes)}",
+        f"counting.family_cold_us,{t_cold * 1e6:.1f},"
+        f"{t_trace / t_cold:.1f}x_traces={cold.trace_count}",
+        f"counting.family_warm_us,{t_warm * 1e6:.1f},"
+        f"{t_trace / t_warm:.1f}x",
+    ]
+
+    # -- serving dedup: distinct batch vs duplicated batch ---------------
+    session = PerfSession.open(_profile())
+    distinct = _serving_kernels(BATCH, BATCH)
+    duplicated = _serving_kernels(UNIQUE, BATCH)
+    session.predict_batch(distinct)          # warm compile + count caches
+    session.predict_batch(duplicated)
+
+    t0 = time.perf_counter()
+    session.predict_batch(distinct)
+    t_nodedup = (time.perf_counter() - t0) / BATCH
+
+    t0 = time.perf_counter()
+    preds = session.predict_batch(duplicated)
+    t_dedup = (time.perf_counter() - t0) / BATCH
+
+    check = abs(sum(preds[-1].breakdown.values()) - preds[-1].seconds)
+    rows += [
+        f"counting.predict_no_dedup_us,{t_nodedup * 1e6:.2f},"
+        f"unique={BATCH}",
+        f"counting.predict_dedup_us,{t_dedup * 1e6:.2f},"
+        f"{t_nodedup / t_dedup:.1f}x_unique={UNIQUE}",
+        f"counting.engine_traces,{session.engine.trace_count},"
+        f"hits={session.engine.hits}",
+        f"counting.breakdown_residual,{check * 1e6:.3g},",
+    ]
+    return rows

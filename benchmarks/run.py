@@ -18,6 +18,9 @@ Benches (one per paper table/figure):
           cold vs solver-cache-warm, closed-loop recovery error
   predict serving surface — PerfSession single vs batched prediction
           throughput (one jit-compiled evaluation per batch)
+  counting amortized symbolic counts — count-matrix construction via
+          symbolic kernel families vs per-size tracing; predict_batch
+          dedup vs no-dedup
 """
 import sys
 import time
@@ -26,6 +29,7 @@ import time
 def main() -> None:
     from benchmarks import paper_figures as pf
     from benchmarks.calibration_bench import calibration_rows
+    from benchmarks.counting_bench import counting_rows
     from benchmarks.predict_bench import predict_rows
     from benchmarks.roofline_bench import roofline_rows
     from benchmarks.study_bench import study_rows
@@ -34,6 +38,7 @@ def main() -> None:
         "calibration": calibration_rows,
         "study": study_rows,
         "predict": predict_rows,
+        "counting": counting_rows,
         "fig1": pf.fig1_matmul_simple,
         "fig2": pf.fig2_madd_component,
         "fig5": pf.fig5_overlap,

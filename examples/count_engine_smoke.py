@@ -1,0 +1,110 @@
+"""Count-engine smoke: the zero-trace warm serving guarantee as an exit
+code (the CI step for PR 5's amortized counting engine).
+
+Runs ``PerfSession.predict_batch`` over a 64-item batch containing 8
+unique kernels (8 duplicates each) against a persistent count store and
+asserts, via the engine's counters:
+
+* dedup — each unique (signature, shapes) kernel is counted exactly once,
+* amortization — a cold store costs exactly 8 traces; a warm store
+  (second process, fresh engine, same ``--store``) costs ZERO traces,
+* correctness — every prediction's per-term breakdown still sums to its
+  predicted seconds.
+
+Usage (cold, then warm — separate processes prove persistence)::
+
+    python examples/count_engine_smoke.py --store .count-cache --expect-traces 8
+    python examples/count_engine_smoke.py --store .count-cache --expect-traces 0
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax.numpy as jnp
+
+from repro.api import PerfSession
+from repro.core.calibrate import FitResult
+from repro.core.countengine import CountEngine
+from repro.core.uipick import MeasurementKernel
+from repro.profiles import DeviceFingerprint, MachineProfile, ModelFit
+from repro.studies.zoo import OVL_FLOP_MEM
+
+N_UNIQUE = 8
+BATCH = 64
+
+
+def _profile() -> MachineProfile:
+    model = OVL_FLOP_MEM.model()
+    fit = FitResult(params={"p_madd": 5e-11, "p_mem": 4e-10,
+                            "p_launch": 3e-6, "p_edge": 40.0},
+                    residual_norm=0.0, iterations=1, converged=True)
+    return MachineProfile(
+        fingerprint=DeviceFingerprint(platform="synth",
+                                      device_kind="count-smoke",
+                                      n_devices=1),
+        fits={OVL_FLOP_MEM.name: ModelFit.from_fit(model, fit)},
+        trials=3)
+
+
+def _kernels() -> list:
+    unique = []
+    for i in range(N_UNIQUE):
+        size = 32 * (i + 1)
+
+        def make_args(s=size):
+            return (jnp.ones((s,), jnp.float32),)
+
+        unique.append(MeasurementKernel(
+            name=f"smoke_{size}", fn=lambda x: x * 2.0 + 1.0,
+            make_args=make_args, tags={"n": size}, sizes={"n": size},
+            code_sig=f"count_smoke_v1_{i}"))
+    return [unique[i % N_UNIQUE] for i in range(BATCH)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--store", required=True,
+                    help="persistent count-store directory")
+    ap.add_argument("--expect-traces", type=int, required=True,
+                    help="exact number of jaxpr traces this run may "
+                         "perform (8 cold, 0 warm)")
+    args = ap.parse_args(argv)
+
+    engine = CountEngine(store=args.store)
+    session = PerfSession.open(_profile(), engine=engine)
+    preds = session.predict_batch(_kernels())
+
+    failures = []
+    if len(preds) != BATCH:
+        failures.append(f"expected {BATCH} predictions, got {len(preds)}")
+    if engine.trace_count != args.expect_traces:
+        failures.append(
+            f"expected exactly {args.expect_traces} traces, engine "
+            f"performed {engine.trace_count} (stats: {engine.stats()})")
+    if session.timer.calls != 0:
+        failures.append(f"prediction timed a kernel "
+                        f"({session.timer.calls} timer calls)")
+    for p in preds:
+        total = sum(p.breakdown.values())
+        if abs(total - p.seconds) > 1e-6 * max(abs(p.seconds), 1e-30):
+            failures.append(f"{p.kernel}: breakdown sums to {total}, "
+                            f"predicted {p.seconds}")
+            break
+    # duplicated items must be bit-identical to their originals
+    for i, p in enumerate(preds[N_UNIQUE:], start=N_UNIQUE):
+        if p.seconds != preds[i % N_UNIQUE].seconds:
+            failures.append(f"duplicate row {i} diverged from its original")
+            break
+
+    if failures:
+        for f in failures:
+            print(f"count-engine smoke FAILED: {f}", file=sys.stderr)
+        return 1
+    print(f"count-engine smoke OK: {len(preds)} predictions, "
+          f"{engine.trace_count} traces, engine stats {engine.stats()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

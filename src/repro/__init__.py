@@ -7,7 +7,8 @@ cheap and cycle-free:
 * facade:     :class:`PerfSession`, :class:`Prediction`,
               :class:`PredictionError` (``repro.api``)
 * modeling:   :class:`Model`, :class:`FeatureTable`,
-              :class:`FeatureCounts`, :func:`count_fn`
+              :class:`FeatureCounts`, :func:`count_fn`,
+              :class:`CountEngine` (amortized symbolic counting)
 * measuring:  :func:`gather_feature_table`, :class:`CountingTimer`,
               :class:`KernelCollection`, :data:`ALL_GENERATORS`
 * fitting:    :func:`fit_model`, :func:`fit_models`, :class:`FitResult`
@@ -36,6 +37,7 @@ _EXPORTS = {
     "FeatureTable": "repro.core.model",
     "FeatureCounts": "repro.core.counting",
     "count_fn": "repro.core.counting",
+    "CountEngine": "repro.core.countengine",
     # measuring
     "gather_feature_table": "repro.core.uipick",
     "CountingTimer": "repro.core.uipick",

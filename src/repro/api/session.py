@@ -31,7 +31,12 @@ import jax.numpy as jnp
 from repro.api.errors import PredictionError, suggest_calibration_tags
 from repro.api.prediction import Prediction, assemble_predictions
 from repro.core.calibrate import gmre_of, relative_errors
-from repro.core.counting import FeatureCounts, count_fn
+from repro.core.countengine import (
+    CountEngine,
+    args_signature,
+    callable_signature,
+)
+from repro.core.counting import FeatureCounts
 from repro.core.model import Model, _param_dtype
 from repro.core.uipick import CountingTimer, MeasurementKernel
 from repro.profiles.cache import MeasurementCache
@@ -61,10 +66,17 @@ class PerfSession:
     def __init__(self, profile: MachineProfile, *,
                  cache: Optional[MeasurementCache] = None,
                  timer: Optional[CountingTimer] = None,
+                 engine: Optional[CountEngine] = None,
                  calibration: Optional[Dict[str, Any]] = None):
         self.profile = profile
         self.cache = cache
         self.timer = _as_counting_timer(timer)
+        # the amortized counting engine: in-process memo + a persistent
+        # tier beside the measurement cache (when one is attached), so a
+        # warm serving process performs zero jaxpr traces —
+        # engine.trace_count is the probe that claim is asserted against
+        self.engine = engine if engine is not None else CountEngine(
+            store=cache.count_store if cache is not None else None)
         # how this session's profile came to be (observability: the CLI
         # prints it, tests assert the zero-timing warm path against it)
         self.calibration: Dict[str, Any] = dict(calibration or {})
@@ -94,6 +106,7 @@ class PerfSession:
              holdout_fraction: float = 0.25,
              retime_rel_std: Optional[float] = None,
              timer: Optional[Callable] = None,
+             engine: Optional[CountEngine] = None,
              save_to: Union[None, str, Path] = None) -> "PerfSession":
         """Open a prediction session.
 
@@ -121,7 +134,7 @@ class PerfSession:
             _check_fingerprint(profile, expected_fingerprint)
             return cls(profile,
                        cache=_as_cache(cache, profile.fingerprint),
-                       timer=timer,
+                       timer=timer, engine=engine,
                        calibration={"source": "profile", "timings": 0,
                                     "retimed": 0})
         if isinstance(source, (str, Path)):
@@ -131,7 +144,7 @@ class PerfSession:
             profile = load_profile(source, expected_fingerprint=fp)
             return cls(profile,
                        cache=_as_cache(cache, profile.fingerprint),
-                       timer=timer,
+                       timer=timer, engine=engine,
                        calibration={"source": f"profile:{source}",
                                     "timings": 0, "retimed": 0})
 
@@ -152,18 +165,22 @@ class PerfSession:
                 f"None (this machine); got {type(source).__name__}")
         counting = _as_counting_timer(base_timer)
         mcache = _as_cache(cache, fingerprint)
+        if engine is None:
+            engine = CountEngine(
+                store=mcache.count_store if mcache is not None else None)
         profile = run_study(
             fingerprint=fingerprint, timer=counting, cache=mcache,
             tags=tags or STUDY_TAGS, trials=trials,
             holdout_fraction=holdout_fraction,
-            retime_rel_std=retime_rel_std)
+            retime_rel_std=retime_rel_std, engine=engine)
         if save_to is not None:
             save_profile(profile, save_to)
-        return cls(profile, cache=mcache, timer=counting,
+        return cls(profile, cache=mcache, timer=counting, engine=engine,
                    calibration={
                        "source": f"calibrated:{fingerprint.id}",
                        "timings": counting.calls,
                        "cache_hits": mcache.hits if mcache else 0,
+                       "count_traces": engine.trace_count,
                        "retimed": len(getattr(profile, "retimed_rows", [])),
                    })
 
@@ -200,6 +217,11 @@ class PerfSession:
         :class:`PredictionError` (naming the unmodeled feature and the
         UIPiCK tags that would calibrate it); the default records such
         features per prediction in ``Prediction.unmodeled``.
+
+        Duplicate items — identical (content signature, argument shapes)
+        — are counted ONCE and their feature rows broadcast, so a batch
+        of 64 requests over 8 distinct kernels costs 8 count lookups (and
+        zero traces when the count cache is warm).
         """
         items = list(items)
         if not items:
@@ -210,9 +232,15 @@ class PerfSession:
         fit_name, mf, m = self._resolve_model(model)
         kernel_names: List[str] = []
         counts_rows: List[FeatureCounts] = []
+        deduped: Dict[Any, FeatureCounts] = {}
         for idx, item in enumerate(items):
-            kname, counts = self._counts_of(item, idx)
+            kname, key, sig = self._item_identity(item, idx)
             kernel_names.append(names[idx] if names is not None else kname)
+            counts = deduped.get(key) if key is not None else None
+            if counts is None:
+                counts = self._counts_of(item, idx, sig)
+                if key is not None:
+                    deduped[key] = counts
             counts_rows.append(counts)
 
         unmodeled = [m.unmodeled_features(c) for c in counts_rows]
@@ -283,36 +311,57 @@ class PerfSession:
         self._resolved[name] = (mf, m)
         return name, mf, m
 
-    def _counts_of(self, item: PredictItem, idx: int
-                   ) -> Tuple[str, FeatureCounts]:
+    def _item_identity(self, item: PredictItem, idx: int
+                       ) -> Tuple[str, Optional[Any], str]:
+        """Display name + dedup key + content signature of one predict
+        item.  The key is the item's content identity — (signature,
+        shapes) — so identical requests in a batch collapse to one count
+        lookup; a ``""`` signature means no sound identity exists (the key
+        falls back to object identity, sound in-batch only, and the
+        engine traces per shape).  The signature rides back so the
+        engine never recomputes the state walk for the same item."""
+        if isinstance(item, MeasurementKernel):
+            sig = item.code_sig or callable_signature(item.fn)
+            # with sig "": same fn OBJECT + name/sizes is sound in-batch
+            key_sig = sig or f"obj:{id(item.fn)}"
+            return item.name, ("kern", key_sig, item.name,
+                               tuple(sorted(item.sizes.items()))), sig
+        if isinstance(item, tuple):
+            fn, args = item
+        elif callable(item):
+            fn, args = item, ()
+        else:
+            raise TypeError(
+                f"predict item #{idx} must be a MeasurementKernel, a "
+                f"callable, or a (callable, args) pair; "
+                f"got {type(item).__name__}")
+        kname = getattr(fn, "__name__", "kernel")
+        if kname == "<lambda>":
+            kname = "kernel"
+        sig = callable_signature(fn)
+        key = ("fn", sig or f"obj:{id(fn)}", args_signature(args))
+        return f"{kname}[{idx}]", key, sig
+
+    def _counts_of(self, item: PredictItem, idx: int, sig: str
+                   ) -> FeatureCounts:
         """One kernel's counted features — through the measurement cache
-        when the item has a stable identity, never through a timer."""
+        and the count engine when the item has a stable identity, never
+        through a timer."""
         if isinstance(item, MeasurementKernel):
             trials = self.profile.trials
             if self.cache is not None:
                 entry = self.cache.get(item, trials)
                 if entry is not None:
-                    return item.name, entry.counts
-                counts = item.counts()
+                    return entry.counts
+                counts = self.engine.counts_for(item, sig=sig)
                 # counts-only entry: a later gather backfills the timing
                 self.cache.put(item, trials, None, counts)
-                return item.name, counts
-            return item.name, item.counts()
+                return counts
+            return self.engine.counts_for(item, sig=sig)
         if isinstance(item, tuple):
             fn, args = item
-            kname = getattr(fn, "__name__", "kernel")
-            if kname == "<lambda>":
-                kname = "kernel"
-            return f"{kname}[{idx}]", count_fn(fn, *args)
-        if callable(item):
-            kname = getattr(item, "__name__", "kernel")
-            if kname == "<lambda>":
-                kname = "kernel"
-            return f"{kname}[{idx}]", count_fn(item)
-        raise TypeError(
-            f"predict item #{idx} must be a MeasurementKernel, a "
-            f"callable, or a (callable, args) pair; "
-            f"got {type(item).__name__}")
+            return self.engine.counts_of_callable(fn, args, sig=sig)
+        return self.engine.counts_of_callable(item, sig=sig)
 
     def _evaluator(self, model: Model) -> Callable:
         sig = model.signature()

@@ -70,7 +70,7 @@ _ARITH = {
     "div": "div", "max": "cmp", "min": "cmp", "neg": "add",
     "exp": "transc", "log": "transc", "tanh": "transc", "logistic": "transc",
     "rsqrt": "transc", "sqrt": "transc", "erf": "transc", "sin": "transc",
-    "cos": "transc", "pow": "transc", "integer_pow": "mul",
+    "cos": "transc", "pow": "transc", "square": "mul",
     "exp2": "transc", "log1p": "transc", "expm1": "transc",
     "cumsum": "add", "cumlogsumexp": "transc", "cummax": "cmp",
 }
@@ -121,6 +121,23 @@ def _count_eqn(eqn, counts: FeatureCounts, mult: float):
                    _size(out_aval) * mult)
         return
 
+    if prim == "integer_pow":
+        # square-and-multiply: x**p costs floor(log2 p) squarings plus
+        # popcount(p)−1 extra multiplies per element, not |p|−1 and not 1
+        # — x**8 is 3 squarings, x**7 is 4 muls (x², x³, x⁶, x⁷), x**2 is
+        # 1.  |p| ≤ 1 is a free copy; a negative exponent adds the
+        # reciprocal's divide.
+        y = int(eqn.params["y"])
+        p = abs(y)
+        if p >= 2:
+            n_mul = (p.bit_length() - 1) + (bin(p).count("1") - 1)
+            counts.add(f"f_op_{_dt(out_aval)}_mul",
+                       _size(out_aval) * n_mul * mult)
+        if y < 0:
+            counts.add(f"f_op_{_dt(out_aval)}_div",
+                       _size(out_aval) * mult)
+        return
+
     if prim in _ARITH:
         kind = _ARITH[prim]
         counts.add(f"f_op_{_dt(out_aval)}_{kind}", _size(out_aval) * mult)
@@ -168,29 +185,26 @@ def _count_eqn(eqn, counts: FeatureCounts, mult: float):
                    n * max(np.log2(max(n, 2)), 1) * mult)
         return
 
-    # ---- control flow: recurse ------------------------------------------
+    # ---- control flow: recurse into the SAME accumulator ------------------
+    # the caller's FeatureCounts and a folded-in multiplier are passed down
+    # instead of building a fresh dict per nesting level and re-merging
+    # key-by-key — nesting depth costs stack frames only, never dict churn
     if prim == "scan":
         length = eqn.params["length"]
-        inner = count_jaxpr_counts(eqn.params["jaxpr"].jaxpr)
-        for k, v in inner.items():
-            counts.add(k, v * length * mult)
+        _count_jaxpr_into(eqn.params["jaxpr"].jaxpr, counts, length * mult)
         counts.add("f_sync_loop_steps", length * mult)
         return
     if prim == "while":
-        inner = count_jaxpr_counts(eqn.params["body_jaxpr"].jaxpr)
         # unknown trip count: charge body AND predicate once per visit (the
         # predicate runs trips+1 times; single-visit accounting charges 1)
-        pred = count_jaxpr_counts(eqn.params["cond_jaxpr"].jaxpr)
-        for k, v in inner.merged(pred).items():
-            counts.add(k, v * mult)
+        _count_jaxpr_into(eqn.params["body_jaxpr"].jaxpr, counts, mult)
+        _count_jaxpr_into(eqn.params["cond_jaxpr"].jaxpr, counts, mult)
         counts.add("f_sync_loop_steps", mult)
         return
     if prim == "cond":
         branches = eqn.params["branches"]
         for br in branches:  # average — divergent-branch accounting (§4)
-            inner = count_jaxpr_counts(br.jaxpr)
-            for k, v in inner.items():
-                counts.add(k, v * mult / len(branches))
+            _count_jaxpr_into(br.jaxpr, counts, mult / len(branches))
         return
     if prim in ("pjit", "closed_call", "core_call", "remat", "checkpoint",
                 "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
@@ -198,17 +212,19 @@ def _count_eqn(eqn, counts: FeatureCounts, mult: float):
         sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
         if sub is not None:
             jx = sub.jaxpr if hasattr(sub, "jaxpr") else sub
-            inner = count_jaxpr_counts(jx)
-            for k, v in inner.items():
-                counts.add(k, v * mult)
+            _count_jaxpr_into(jx, counts, mult)
         return
     # everything else: ignore (shape ops, rng, etc.)
 
 
+def _count_jaxpr_into(jaxpr, counts: FeatureCounts, mult: float) -> None:
+    for eqn in jaxpr.eqns:
+        _count_eqn(eqn, counts, mult)
+
+
 def count_jaxpr_counts(jaxpr) -> FeatureCounts:
     counts = FeatureCounts()
-    for eqn in jaxpr.eqns:
-        _count_eqn(eqn, counts, 1.0)
+    _count_jaxpr_into(jaxpr, counts, 1.0)
     return counts
 
 
@@ -238,6 +254,62 @@ class SymbolicCounts:
             out[k] = pc(**sizes)
         return out
 
+    def at_batch(self, **sizes) -> Dict[str, np.ndarray]:
+        """Vectorized evaluation over arrays of size values: one float64
+        array per feature (constant features broadcast to the sweep
+        shape).  A whole battery's count matrix from flat numpy, no
+        per-size Python loop — the count engine's serving hot path."""
+        shape = np.broadcast_shapes(
+            *(np.asarray(v).shape for v in sizes.values())) \
+            if sizes else ()
+        return {k: np.broadcast_to(pc.eval_batch(**sizes), shape)
+                for k, pc in self.counts.items()}
+
+
+def parametric_counts_from(
+    probe: Callable[..., FeatureCounts],
+    var_degrees: Mapping[str, int],
+    *,
+    base: int = 16,
+    scale: int = 16,
+) -> SymbolicCounts:
+    """Reconstruct symbolic counts from an arbitrary per-size prober.
+
+    ``probe(**sizes) -> FeatureCounts`` counts one concrete instantiation
+    (it may build a *different* callable per size — kernel families whose
+    bodies close over the size go through here); it is invoked exactly
+    once per grid point.  Counts of static-control programs are polynomial
+    in each size, so exact Lagrange interpolation over ``degree+1`` probe
+    values per variable recovers the full symbolic form.
+    """
+    feature_ids = set()
+    cache: Dict[Tuple, FeatureCounts] = {}
+
+    def cached_probe(**sizes) -> FeatureCounts:
+        key = tuple(sorted(sizes.items()))
+        if key not in cache:
+            cache[key] = probe(**sizes)
+            feature_ids.update(cache[key].keys())
+        return cache[key]
+
+    # probe the FULL interpolation grid before enumerating features: a
+    # feature may be absent at the base size yet appear at larger probes
+    # (e.g. a scan that vanishes when n == tile), and freezing the feature
+    # set after one probe would silently drop its polynomial
+    names = sorted(var_degrees)
+    grids = [[base + scale * i for i in range(var_degrees[v] + 1)]
+             for v in names]
+    for combo in itertools.product(*grids):
+        cached_probe(**dict(zip(names, combo)))
+    polys: Dict[str, ParametricCount] = {}
+    assumptions = tuple(f"{v} % {scale} == 0" for v in var_degrees)
+    for fid in sorted(feature_ids):
+        p = interpolate_polynomial(
+            lambda **sizes: cached_probe(**sizes)[fid], var_degrees,
+            base=base, scale=scale)
+        polys[fid] = ParametricCount(p, assumptions)
+    return SymbolicCounts(polys, assumptions)
+
 
 def parametric_counts(
     make_args: Callable[..., tuple],
@@ -255,31 +327,6 @@ def parametric_counts(
     The result re-evaluates in microseconds for any problem size —
     the paper's amortization property.
     """
-    feature_ids = set()
-    cache: Dict[Tuple, FeatureCounts] = {}
-
-    def probe(**sizes) -> FeatureCounts:
-        key = tuple(sorted(sizes.items()))
-        if key not in cache:
-            args = make_args(**sizes)
-            cache[key] = count_fn(fn, *args)
-            feature_ids.update(cache[key].keys())
-        return cache[key]
-
-    # probe the FULL interpolation grid before enumerating features: a
-    # feature may be absent at the base size yet appear at larger probes
-    # (e.g. a scan that vanishes when n == tile), and freezing the feature
-    # set after one probe would silently drop its polynomial
-    names = sorted(var_degrees)
-    grids = [[base + scale * i for i in range(var_degrees[v] + 1)]
-             for v in names]
-    for combo in itertools.product(*grids):
-        probe(**dict(zip(names, combo)))
-    polys: Dict[str, ParametricCount] = {}
-    assumptions = tuple(f"{v} % {scale} == 0" for v in var_degrees)
-    for fid in sorted(feature_ids):
-        p = interpolate_polynomial(
-            lambda **sizes: probe(**sizes)[fid], var_degrees,
-            base=base, scale=scale)
-        polys[fid] = ParametricCount(p, assumptions)
-    return SymbolicCounts(polys, assumptions)
+    return parametric_counts_from(
+        lambda **sizes: count_fn(fn, *make_args(**sizes)),
+        var_degrees, base=base, scale=scale)

@@ -15,6 +15,8 @@ from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Callable, Dict, List, Mapping, Sequence, Tuple, Union
 
+import numpy as np
+
 Number = Union[int, float, Fraction]
 
 # monomial: tuple of (var, exponent) sorted by var
@@ -119,6 +121,53 @@ class Poly:
         assert isinstance(v, float), f"unbound vars {self.free_vars()}"
         return v
 
+    def eval_batch(self, **env) -> np.ndarray:
+        """Vectorized evaluation over numpy arrays of variable values.
+
+        ``env`` maps every free variable to an array (or scalar); arrays
+        broadcast against each other and the result is a float64 array of
+        the broadcast shape.  Evaluation is multivariate Horner — terms
+        are grouped by the leading variable's exponent and folded as
+        ``acc·x + lower`` — so a degree-d polynomial over an N-point sweep
+        costs O(d·N) flat numpy ops, no per-point Python.  This is the
+        kernel of the count engine's amortization: one symbolic
+        reconstruction, then whole size sweeps in microseconds.
+        """
+        free = self.free_vars()
+        missing = free - set(env)
+        if missing:
+            raise ValueError(f"eval_batch: unbound variable(s) "
+                             f"{sorted(missing)}")
+        # every provided grid participates in the broadcast shape, so a
+        # constant (or lower-arity) polynomial still returns one value per
+        # sweep point — callers build count matrices from mixed-degree
+        # feature polynomials over a single sizes env
+        arrs = {v: np.asarray(env[v], np.float64) for v in env}
+        shape = np.broadcast_shapes(*(a.shape for a in arrs.values())) \
+            if arrs else ()
+        names = sorted(free)
+
+        def horner(terms: Dict[Monomial, Fraction],
+                   rest: List[str]) -> np.ndarray:
+            if not rest:
+                return np.full(shape, float(terms.get((), Fraction(0))))
+            v, tail = rest[0], rest[1:]
+            by_exp: Dict[int, Dict[Monomial, Fraction]] = {}
+            for m, c in terms.items():
+                e = next((ee for name, ee in m if name == v), 0)
+                mm = tuple((name, ee) for name, ee in m if name != v)
+                by_exp.setdefault(e, {})[mm] = c
+            x = arrs[v]
+            acc = horner(by_exp[max(by_exp)], tail)
+            for e in range(max(by_exp) - 1, -1, -1):
+                acc = acc * x
+                if e in by_exp:
+                    acc = acc + horner(by_exp[e], tail)
+            return acc
+
+        return horner(self.terms, names) if self.terms \
+            else np.zeros(shape)
+
     def free_vars(self) -> set:
         return {v for m in self.terms for v, _ in m}
 
@@ -146,6 +195,12 @@ class ParametricCount:
 
     def __call__(self, **env) -> float:
         return self.poly(**env)
+
+    def eval_batch(self, **env) -> np.ndarray:
+        """Vectorized :meth:`Poly.eval_batch` over the carried polynomial
+        (variables the polynomial doesn't use still shape the broadcast,
+        so one sizes env drives every feature polynomial of a family)."""
+        return self.poly.eval_batch(**env)
 
 
 def interpolate_polynomial(

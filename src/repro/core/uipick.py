@@ -20,6 +20,7 @@ import enum
 import hashlib
 import inspect
 import itertools
+import json
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
@@ -85,6 +86,44 @@ class TimingStats:
 TimerResult = Union[float, TimingStats]
 
 
+@dataclass(frozen=True)
+class FamilySpec:
+    """A generator's declaration that its kernels form a *symbolic family*:
+    operation counts are polynomial in the declared size variables with the
+    declared degrees, so the count engine can reconstruct the family's
+    :class:`~repro.core.counting.SymbolicCounts` from a minimal probe grid
+    once and evaluate the whole size sweep by vectorized polynomial
+    evaluation — zero traces per battery member.
+
+    ``applies(**fixed)`` gates the declaration per fixed (non-size)
+    argument combination (e.g. ``mem_stream``'s ``strided`` pattern shapes
+    as ``isqrt(n)²`` — not polynomial in ``n`` — and opts out);
+    ``probe(**fixed)`` overrides the probe-grid geometry (e.g. tile-aligned
+    probe sizes for blocked matmuls).
+    """
+
+    var_degrees: Mapping[str, int]
+    base: int = 16
+    scale: int = 16
+    applies: Optional[Callable[..., bool]] = None
+    probe: Optional[Callable[..., Tuple[int, int]]] = None
+
+
+@dataclass
+class KernelFamily:
+    """One concrete symbolic family riding on a measurement kernel: a
+    content-stable ``key`` (generator source signature + fixed args +
+    degrees + probe geometry) and a ``build(**sizes)`` hook rebuilding the
+    family member at arbitrary probe sizes.  Kernels sharing a family key
+    share one symbolic reconstruction in the count engine."""
+
+    key: str
+    build: Callable[..., "MeasurementKernel"]
+    var_degrees: Dict[str, int]
+    base: int = 16
+    scale: int = 16
+
+
 @dataclass
 class MeasurementKernel:
     name: str
@@ -97,6 +136,10 @@ class MeasurementKernel:
     # editing a generator invalidates its cached timings without a global
     # schema bump.  "" for hand-built kernels (tests, ad-hoc measurement).
     code_sig: str = ""
+    # the symbolic family this kernel belongs to (attached by
+    # Generator.variants when the generator declares a FamilySpec); None
+    # for hand-built kernels and non-polynomial argument combinations
+    family: Optional[KernelFamily] = None
 
     _counts: Optional[FeatureCounts] = None
     _jitted: Optional[Callable] = None
@@ -147,12 +190,42 @@ class Generator:
     arg_space: Dict[str, Tuple[Any, ...]]
     build: Callable[..., MeasurementKernel]
     code_sig: str = ""
+    # symbolic-family declaration: counts of this generator's kernels are
+    # polynomial (with these degrees) in the size variables; None opts the
+    # generator out of symbolic counting entirely
+    family: Optional[FamilySpec] = None
 
     def __post_init__(self):
         # signature of the builder source (which lexically contains the
         # kernel bodies it closes over) — computed ONCE at registration
         if not self.code_sig:
             self.code_sig = source_signature(self.build)
+
+    def _family_of(self, kw: Mapping[str, Any]) -> Optional[KernelFamily]:
+        spec = self.family
+        if spec is None:
+            return None
+        fixed = {a: v for a, v in kw.items() if a not in spec.var_degrees}
+        if spec.applies is not None and not spec.applies(**fixed):
+            return None
+        base, scale = (spec.probe(**fixed) if spec.probe is not None
+                       else (spec.base, spec.scale))
+        key = json.dumps({
+            "gen": self.name,
+            "code": self.code_sig,
+            "fixed": {a: repr(v) for a, v in sorted(fixed.items())},
+            "degrees": {v: int(d) for v, d
+                        in sorted(spec.var_degrees.items())},
+            "base": int(base), "scale": int(scale),
+        }, sort_keys=True)
+        build = self.build
+
+        def build_at(**sizes) -> MeasurementKernel:
+            return build(**{**fixed, **sizes})
+
+        return KernelFamily(key=key, build=build_at,
+                            var_degrees=dict(spec.var_degrees),
+                            base=int(base), scale=int(scale))
 
     def variants(self, constraints: Mapping[str, Tuple[Any, ...]]
                  ) -> Iterable[MeasurementKernel]:
@@ -166,6 +239,7 @@ class Generator:
             else:
                 space[arg] = allowed
         names = sorted(space)
+        families: Dict[Tuple, Optional[KernelFamily]] = {}
         for combo in itertools.product(*(space[n] for n in names)):
             kw = dict(zip(names, combo))
             try:
@@ -174,6 +248,13 @@ class Generator:
                 continue
             if not kernel.code_sig:
                 kernel.code_sig = self.code_sig
+            if self.family is not None and kernel.family is None:
+                fixed_key = tuple(sorted(
+                    (a, v) for a, v in kw.items()
+                    if a not in self.family.var_degrees))
+                if fixed_key not in families:
+                    families[fixed_key] = self._family_of(kw)
+                kernel.family = families[fixed_key]
             yield kernel
 
 
@@ -277,6 +358,7 @@ def gather_feature_table(
     timer: Optional[Callable[[MeasurementKernel, int], float]] = None,
     cache: Optional[Any] = None,
     retime_rel_std: Optional[float] = None,
+    engine: Optional[Any] = None,
 ) -> FeatureTable:
     """Dense timing table: one row per measurement kernel, one column per
     feature id — the native input of the batched calibration pipeline.
@@ -293,6 +375,12 @@ def gather_feature_table(
     :class:`repro.profiles.MeasurementCache`-shaped object — on a cache hit
     neither the timer nor the jaxpr counter runs, so a warm recalibration
     performs zero timings.
+
+    ``engine`` is a :class:`repro.core.countengine.CountEngine`-shaped
+    object; with one, counts for cache-missing rows come from the engine —
+    kernels carrying a symbolic family share one reconstruction and the
+    whole size sweep's count matrix is filled by vectorized polynomial
+    evaluation instead of one trace per size point.
 
     ``retime_rel_std`` is the noisy-row re-measurement heuristic (ROADMAP
     follow-up): rows whose relative wall-clock std exceeds the threshold
@@ -313,8 +401,34 @@ def gather_feature_table(
     values = np.zeros((len(kernels), len(features)), np.float64)
     row_noise: Dict[str, Dict[str, float]] = {}
     retimed: List[str] = []
+    entries = [cache.get(k, trials) if cache is not None else None
+               for k in kernels]
+    # counts for every cache-missing row, resolved up front: the engine
+    # batches symbolic families across the whole battery (vectorized
+    # polynomial evaluation), so this is one pass, not one per row
+    need = [i for i, e in enumerate(entries) if e is None]
+    if engine is not None and need:
+        fresh_counts = dict(zip(
+            need, engine.counts_batch([kernels[i] for i in need])))
+    else:
+        fresh_counts = {i: kernels[i].counts() for i in need}
+    # duplicate kernels in ONE cold gather (same name/sizes/code identity)
+    # must be measured once — the pre-resolved entries above can't see the
+    # put an earlier iteration performed, so track in-gather results here
+    local: Dict[Tuple, Tuple] = {}
     for i, k in enumerate(kernels):
-        entry = cache.get(k, trials) if cache is not None else None
+        entry = entries[i]
+        kid = (k.name, tuple(sorted(k.sizes.items())), k.code_sig)
+        if entry is None and kid in local:
+            counts, wall, stats = local[kid]
+            for j, f in count_cols:
+                values[i, j] = counts[f]
+            for j in wall_cols:
+                values[i, j] = wall
+            if stats is not None and (stats.std is not None
+                                      or stats.min is not None):
+                row_noise[k.name] = stats.to_dict()
+            continue
         stats: Optional[TimingStats] = None
         if entry is not None:
             counts, wall = entry.counts, entry.wall_time
@@ -325,7 +439,7 @@ def gather_feature_table(
                 wall = stats.median
                 cache.put(k, trials, wall, counts, noise=stats)
         else:
-            counts = k.counts()
+            counts = fresh_counts[i]
             if wall_cols:
                 stats = TimingStats.coerce(timer(k, trials))
                 wall = stats.median
@@ -346,6 +460,8 @@ def gather_feature_table(
         if stats is not None and (stats.std is not None
                                   or stats.min is not None):
             row_noise[k.name] = stats.to_dict()
+        if entries[i] is None:
+            local[kid] = (counts, wall, stats)
         for j, f in count_cols:
             values[i, j] = counts[f]
         for j in wall_cols:
@@ -473,6 +589,12 @@ MATMUL_SQ = Generator(
         tile=(16, 32, 64, 128),
     ),
     build=_build_matmul_sq,
+    # n³ madds (+ n² traffic); blocked variants need tile-aligned probes
+    family=FamilySpec(
+        var_degrees={"n": 3},
+        probe=lambda **fx: (fx["tile"], fx["tile"]) if fx["prefetch"]
+        else (16, 16),
+    ),
 )
 
 
@@ -516,6 +638,8 @@ FLOPS_MADD = Generator(
         dtype=("float32", "bfloat16"),
     ),
     build=_build_madd,
+    # per-element work × unrolled-loop trips: bilinear in (nelements, iters)
+    family=FamilySpec(var_degrees={"nelements": 1, "iters": 1}),
 )
 
 
@@ -562,6 +686,8 @@ FLOPS_DOT = Generator(
         dtype=("float32", "bfloat16"),
     ),
     build=_build_dot,
+    # n³ madds per chain step × iters steps
+    family=FamilySpec(var_degrees={"n_dot": 3, "iters": 1}),
 )
 
 
@@ -641,6 +767,13 @@ MEM_STREAM = Generator(
         dtype=("float32", "bfloat16"),
     ),
     build=_build_stream,
+    # element traffic is linear in nelements — EXCEPT the strided pattern,
+    # whose working shape is (isqrt(n), isqrt(n)): isqrt(n)² is not a
+    # polynomial in n, so that pattern keeps exact per-shape tracing
+    family=FamilySpec(
+        var_degrees={"nelements": 1},
+        applies=lambda **fx: fx["pattern"] != "strided",
+    ),
 )
 
 
@@ -677,6 +810,8 @@ ONCHIP = Generator(
         dtype=("float32",),
     ),
     build=_build_onchip,
+    # load+store rounds over a resident buffer: bilinear
+    family=FamilySpec(var_degrees={"working_set": 1, "iters": 1}),
 )
 
 
@@ -700,6 +835,8 @@ EMPTY = Generator(
     frozenset({"empty_kernel", "launch"}),
     arg_space=dict(nelements=(16, 1024, 65536)),
     build=_build_empty,
+    # identity kernel: counts are size-independent (launch overhead only)
+    family=FamilySpec(var_degrees={"nelements": 0}),
 )
 
 
@@ -727,6 +864,7 @@ LOOPSTEP = Generator(
     frozenset({"sync_loop_pattern", "sync"}),
     arg_space=dict(steps=(64, 512, 4096, 32768)),
     build=_build_loopstep,
+    family=FamilySpec(var_degrees={"steps": 1}),
 )
 
 
@@ -768,6 +906,8 @@ OVERLAP = Generator(
         dtype=("float32",),
     ),
     build=_build_overlap,
+    # one linear pass over nelements + m fixed-size on-chip rounds
+    family=FamilySpec(var_degrees={"nelements": 1, "m": 1}),
 )
 
 
@@ -834,6 +974,8 @@ DG_DIFF = Generator(
         dtype=("float32",),
     ),
     build=_build_dg,
+    # every variant is one contraction sweep, linear in element count
+    family=FamilySpec(var_degrees={"nelements_dg": 1}),
 )
 
 
@@ -876,6 +1018,7 @@ STENCIL = Generator(
         dtype=("float32",),
     ),
     build=_build_stencil,
+    family=FamilySpec(var_degrees={"n_grid": 2}),
 )
 
 

@@ -46,7 +46,11 @@ from repro.core.uipick import TimingStats
 # v2: keys carry the generator-source code signature ("code"); v1 entries
 # (no code identity at all) can never be trusted against edited kernels,
 # so they read as misses and are GC'd as stale-schema
-CACHE_SCHEMA_VERSION = 2
+# v3: the counting cost model changed (integer_pow charges exact
+# square-and-multiply muls + a div for negative exponents; `square`
+# counts a mul) — entries persisted under the old rule would silently mix
+# two cost models into one feature table
+CACHE_SCHEMA_VERSION = 3
 
 # files the cache owns: entries are always named by a 64-hex SHA-256
 # digest — anything else in the directory is not ours to count or delete
@@ -99,6 +103,16 @@ class MeasurementCache:
         self.fingerprint = fingerprint
         self.hits = 0
         self.misses = 0
+
+    @property
+    def count_store(self) -> Path:
+        """Directory for the count engine's persistent tier, beside the
+        timing entries (``<root>/countengine/``).  Counts are
+        machine-independent, so unlike timing entries they carry no device
+        fingerprint in their keys; they live in a subdirectory so
+        :meth:`gc`'s flat ``*.json`` sweep (and the entry-name regex)
+        never classifies them as corrupt timing entries."""
+        return self.root / "countengine"
 
     # -- keying --------------------------------------------------------------
     def _key_payload(self, kernel_name: str, sizes: Mapping[str, int],

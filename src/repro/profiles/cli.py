@@ -161,6 +161,12 @@ def _calibrate(argv: Optional[List[str]]) -> int:
     cache = MeasurementCache(args.cache_dir, fingerprint) \
         if args.cache_dir else None
     timer = CountingTimer(base_timer) if base_timer else CountingTimer()
+    # amortized symbolic counting: battery counts come from kernel-family
+    # polynomials (persisted beside the measurement cache) instead of one
+    # jaxpr trace per kernel per size
+    from repro.core.countengine import CountEngine
+    engine = CountEngine(
+        store=cache.count_store if cache is not None else None)
 
     if args.zoo:
         from repro.studies import (
@@ -177,7 +183,8 @@ def _calibrate(argv: Optional[List[str]]) -> int:
                 trials=args.trials,
                 holdout_fraction=args.holdout_fraction,
                 match=_MATCH[args.match],
-                retime_rel_std=args.retime_rel_std)
+                retime_rel_std=args.retime_rel_std,
+                engine=engine)
         except StudyError as e:
             print(f"[calibrate] {e}", file=sys.stderr)
             return 2
@@ -204,7 +211,8 @@ def _calibrate(argv: Optional[List[str]]) -> int:
         table = gather_feature_table(model.all_features(), kernels,
                                      trials=args.trials, timer=timer,
                                      cache=cache,
-                                     retime_rel_std=args.retime_rel_std)
+                                     retime_rel_std=args.retime_rel_std,
+                                     engine=engine)
         _retime_line(args, table.retimed_rows)
         fit = fit_model(model, table, nonneg=True)
         profile = MachineProfile(
@@ -219,6 +227,8 @@ def _calibrate(argv: Optional[List[str]]) -> int:
 
     hits = cache.hits if cache is not None else 0
     print(f"[calibrate] timings_performed={timer.calls} cache_hits={hits}")
+    print(f"[calibrate] count_traces={engine.trace_count} "
+          f"count_hits={engine.hits}")
     print(f"[calibrate] profile -> {args.out}")
     if args.expect_zero_timings and timer.calls:
         print(f"[calibrate] FAIL: expected a fully warm cache but "
@@ -302,7 +312,9 @@ def _cmd_predict(argv: List[str]) -> int:
           f"{'n/a' if gmre is None else f'{gmre * 100:.2f}%'}")
     print(f"[predict] timings_performed={session.timer.calls} "
           f"batched_evals={session.eval_calls} "
-          f"traces={session.trace_count}")
+          f"traces={session.trace_count} "
+          f"count_traces={session.engine.trace_count} "
+          f"count_hits={session.engine.hits}")
     if args.expect_zero_timings and session.timer.calls:
         print(f"[predict] FAIL: prediction must never time kernels but "
               f"{session.timer.calls} timing passes ran", file=sys.stderr)

@@ -72,6 +72,7 @@ def run_study(
     holdout_fraction: float = 0.25,
     match: MatchCondition = MatchCondition.INTERSECT,
     retime_rel_std: Optional[float] = None,
+    engine: Optional[Any] = None,
 ) -> MachineProfile:
     """One machine's full study: gather once, fit the whole zoo, persist
     fits + held-out rows into a single profile.
@@ -79,7 +80,10 @@ def run_study(
     ``retime_rel_std`` forwards the noisy-row re-measurement heuristic to
     the gather (see :func:`gather_feature_table`); the names of re-timed
     rows ride on the returned profile as the transient attribute
-    ``retimed_rows`` (observability — not serialized)."""
+    ``retimed_rows`` (observability — not serialized).  ``engine`` is an
+    optional :class:`~repro.core.countengine.CountEngine`: battery counts
+    then come from symbolic kernel families (vectorized polynomial
+    evaluation) instead of one trace per kernel."""
     entries = list(entries)
     if not entries:
         raise StudyError("a study needs at least one zoo entry")
@@ -104,7 +108,8 @@ def run_study(
 
     table = gather_feature_table(features, kernels, trials=trials,
                                  timer=timer, cache=cache,
-                                 retime_rel_std=retime_rel_std)
+                                 retime_rel_std=retime_rel_std,
+                                 engine=engine)
     train, holdout = holdout_split(table, holdout_fraction=holdout_fraction)
     widest = max(len(m.param_names) for m in models.values())
     if len(train) < widest:

@@ -39,6 +39,27 @@ def test_scan_counts_multiply():
     assert c["f_op_float32_transc"] == 7 * 16 * 16
 
 
+def test_integer_pow_charges_square_and_multiply():
+    """x**p is floor(log2|p|) squarings + popcount(|p|)−1 extra multiplies
+    per element (square-and-multiply lowering), not one and not |p|−1;
+    |p| ≤ 1 is a free copy and negative exponents add one divide."""
+    for p, muls in [(2, 1), (3, 2), (4, 2), (5, 3), (7, 4), (8, 3),
+                    (9, 4), (11, 5), (-2, 1), (-8, 3)]:
+        c = count_fn(lambda x, _p=p: x ** _p, jnp.ones((16,)))
+        assert c["f_op_float32_mul"] == 16 * muls, (p, dict(c))
+        assert c["f_op_float32_div"] == (16 if p < 0 else 0), (p, dict(c))
+    for p in (0, 1, -1):
+        c = count_fn(lambda x, _p=p: jax.lax.integer_pow(x, _p),
+                     jnp.ones((16,)))
+        assert c["f_op_float32_mul"] == 0, (p, dict(c))
+    c = count_fn(lambda x: jax.lax.integer_pow(x, -1), jnp.ones((16,)))
+    assert c["f_op_float32_div"] == 16
+    # jnp.square lowers to its own `square` primitive: one mul per
+    # element, consistent with x**2 / x*x
+    c = count_fn(lambda x: jnp.square(x), jnp.ones((16,)))
+    assert c["f_op_float32_mul"] == 16
+
+
 def test_cond_counts_average():
     def f(x):
         return jax.lax.cond(x.sum() > 0, lambda v: v @ v, lambda v: v, x)
