@@ -10,6 +10,13 @@ mathematically-equivalent program variants *without running them*:
 Finally measure everything to score the model's ranking quality.
 
   PYTHONPATH=src python examples/autotune_variants.py
+
+The variant set is also a lint target: importing this module never times
+anything, and ``lint_targets()`` hands the exact variants below to the
+static modelability auditor —
+
+  PYTHONPATH=src python -m repro.lint --no-default \
+      examples/autotune_variants.py
 """
 import pathlib
 import sys
@@ -22,11 +29,31 @@ from repro.core.variantselect import Variant, rank_variants, ranking_quality
 
 COLL = KernelCollection(ALL_GENERATORS)
 
+# the three §8 variant sets this example ranks (and repro.lint audits)
+TAG_SETS = [
+    ("DG differentiation (4 variants)",
+     ["dg_diff", "dtype:float32", "nelements_dg:32768"]),
+    ("5-point stencil (2 lowerings)",
+     ["finite_diff", "dtype:float32", "n_grid:4096"]),
+    ("matmul: tiled vs naive",
+     ["matmul_sq", "dtype:float32", "n:768", "tile:64"]),
+]
+
+
+def variants_for(tags):
+    return [Variant(k.name, k.fn, k.make_args)
+            for k in COLL.generate_kernels(tags)]
+
+
+def lint_targets():
+    """Every variant this example would rank, as static audit targets
+    (``repro.lint`` traces them abstractly — nothing is built or run)."""
+    return [v for _title, tags in TAG_SETS for v in variants_for(tags)]
+
 
 def show(title, tags):
     model, fit = calibrated_base_model()
-    knls = COLL.generate_kernels(tags)
-    variants = [Variant(k.name, k.fn, k.make_args) for k in knls]
+    variants = variants_for(tags)
     ranked = rank_variants(model, fit, variants, measure=True, trials=6)
     q = ranking_quality(ranked)
     print(f"\n== {title} ==")
@@ -38,12 +65,8 @@ def show(title, tags):
 
 
 def main():
-    show("DG differentiation (4 variants)",
-         ["dg_diff", "dtype:float32", "nelements_dg:32768"])
-    show("5-point stencil (2 lowerings)",
-         ["finite_diff", "dtype:float32", "n_grid:4096"])
-    show("matmul: tiled vs naive",
-         ["matmul_sq", "dtype:float32", "n:768", "tile:64"])
+    for title, tags in TAG_SETS:
+        show(title, tags)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,54 @@
+"""Static modelability analysis: lint kernels, count families, and model
+zoos before any timing runs.
+
+Everything in this package operates on abstract values (``jax.make_jaxpr``
+over ``ShapeDtypeStruct`` inputs, ``jax.eval_shape`` over argument
+builders) or pure reflection — auditing never executes a kernel, never
+allocates a device array, never times anything.  The CLI entry point is
+``python -m repro.lint``; the programmatic one is
+:meth:`repro.api.PerfSession.audit`.
+
+Submodules:
+
+* :mod:`~repro.analysis.diagnostics` — typed severity-ranked findings,
+  deterministic reports, suppression, CI baselines;
+* :mod:`~repro.analysis.scope` — jaxpr scope auditor (modeled vs
+  unmodeled vs opaque primitives, data-dependent loops, mixed precision);
+* :mod:`~repro.analysis.families` — ``FamilySpec`` degree validation by
+  exact finite differencing over the probe lattice;
+* :mod:`~repro.analysis.identifiability` — design-matrix rank and
+  conditioning of zoo rungs against a battery;
+* :mod:`~repro.analysis.sighazards` — cache-signature hazards that
+  defeat the count engine's dedup;
+* :mod:`~repro.analysis.targets` — built-in Pallas-kernel lint targets;
+* :mod:`~repro.analysis.cli` — the ``repro.lint`` command line.
+"""
+from repro.analysis.diagnostics import (
+    SEVERITIES,
+    AnalysisError,
+    Diagnostic,
+    DiagnosticReport,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.families import check_lattice, validate_family
+from repro.analysis.identifiability import analyze_model, audit_battery
+from repro.analysis.scope import abstract_args, audit_callable, audit_jaxpr
+from repro.analysis.sighazards import audit_signature
+
+__all__ = [
+    "SEVERITIES",
+    "AnalysisError",
+    "Diagnostic",
+    "DiagnosticReport",
+    "abstract_args",
+    "analyze_model",
+    "audit_battery",
+    "audit_callable",
+    "audit_jaxpr",
+    "audit_signature",
+    "check_lattice",
+    "load_baseline",
+    "save_baseline",
+    "validate_family",
+]

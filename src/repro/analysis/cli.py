@@ -1,0 +1,246 @@
+"""``python -m repro.lint`` — the modelability auditor's command line.
+
+One run, zero executions: every check below works on abstract values
+(``jax.make_jaxpr`` / ``jax.eval_shape``) or pure reflection, so linting
+an entire kernel zoo costs a few dozen traces and not one device kernel,
+not one timing.  The report's ``stats`` line says exactly that
+(``timings=0 traces=N``).
+
+Default scope (no arguments):
+
+* every registered UIPiCK generator — jaxpr scope audit of a
+  representative variant, family-degree validation by finite
+  differencing, probe-lattice divisibility, cache-signature hazards;
+* every model-zoo rung — identifiability analysis against the smoke
+  study battery's symbolic counts.
+
+``--kernels`` adds the Pallas kernel wrappers
+(:mod:`repro.analysis.targets`); positional arguments name extra target
+modules (dotted import path or a ``.py`` file) exposing ``LINT_TARGETS``
+(an iterable) or ``lint_targets()`` — items need ``name`` + ``fn`` plus
+either already-abstract ``args`` or a concrete ``make_args`` builder
+(``repro.core.uipick.MeasurementKernel`` and
+``repro.core.variantselect.Variant`` both qualify as-is).
+
+Exit status is 1 when error-severity diagnostics appear that are not in
+the ``--baseline`` file (CI mode: adopt today's findings once with
+``--write-baseline``, fail only on regressions), 0 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import itertools
+import json
+import sys
+import warnings
+from pathlib import Path
+from typing import Any, Iterable, List, Optional, Sequence
+
+from repro.analysis.diagnostics import (
+    AnalysisError,
+    Diagnostic,
+    DiagnosticReport,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.families import check_lattice, validate_family
+from repro.analysis.identifiability import analyze_model
+from repro.analysis.scope import abstract_args, audit_callable
+from repro.analysis.sighazards import audit_signature
+from repro.core.counting import count_fn
+from repro.core.uipick import (
+    ALL_GENERATORS,
+    Generator,
+    KernelCollection,
+    LatticeAssumptionWarning,
+    MatchCondition,
+    _SkipVariant,
+)
+from repro.studies.zoo import MODEL_ZOO, STUDY_SMOKE_TAGS
+
+
+def _first_kernel(gen: Generator):
+    """The generator's first buildable variant (argument-space order) —
+    the representative its kernel body is scope-audited at."""
+    names = sorted(gen.arg_space)
+    for combo in itertools.product(*(gen.arg_space[n] for n in names)):
+        try:
+            return gen.build(**dict(zip(names, combo)))
+        except _SkipVariant:
+            continue
+    return None
+
+
+def audit_generators(report: DiagnosticReport,
+                     generators: Sequence[Generator] = tuple(ALL_GENERATORS)
+                     ) -> None:
+    """Scope + family + lattice + signature audits of UIPiCK generators."""
+    for gen in generators:
+        loc = f"generator:{gen.name}"
+        kernel = _first_kernel(gen)
+        if kernel is None:
+            report.extend([Diagnostic(
+                "error", "untraceable-kernel", loc,
+                "no argument-space combination builds a kernel")])
+            continue
+        report.extend(audit_callable(
+            kernel.fn, abstract_args(kernel.make_args), loc,
+            stats=report.stats))
+        report.extend(audit_signature(kernel.fn, loc))
+        report.extend(validate_family(gen, stats=report.stats))
+        report.extend(check_lattice(gen))
+
+
+def audit_zoo(report: DiagnosticReport,
+              tags: Sequence[str] = tuple(STUDY_SMOKE_TAGS)) -> None:
+    """Identifiability of every zoo rung against the battery the given
+    tags generate — counts traced abstractly, nothing timed."""
+    kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
+        list(tags), MatchCondition.INTERSECT)
+    rows = []
+    for k in kernels:
+        rows.append(count_fn(k.fn, *abstract_args(k.make_args)))
+        report.stats["traces"] = report.stats.get("traces", 0) + 1
+    battery = ",".join(sorted(t for t in tags if ":" not in t))
+    for entry in MODEL_ZOO:
+        model = entry.model()
+        F = model.align(rows, missing="zero")
+        report.extend(analyze_model(
+            model, F, f"model:{entry.name}[{battery}]"))
+
+
+def audit_targets(report: DiagnosticReport, targets: Iterable[Any]) -> None:
+    """Scope + signature audits of adapted kernel targets."""
+    for t in targets:
+        name = getattr(t, "name", None) or getattr(
+            getattr(t, "fn", t), "__name__", repr(t))
+        loc = f"kernel:{name}"
+        fn = getattr(t, "fn", None)
+        if fn is None and callable(t):
+            fn = t
+        if fn is None:
+            report.extend([Diagnostic(
+                "error", "untraceable-kernel", loc,
+                f"target {name!r} has no callable `fn`")])
+            continue
+        if getattr(t, "args", None) is not None:
+            args = tuple(t.args)
+        elif getattr(t, "make_args", None) is not None:
+            args = abstract_args(t.make_args)
+        else:
+            args = ()
+        report.extend(audit_callable(fn, args, loc, stats=report.stats))
+        report.extend(audit_signature(fn, loc))
+
+
+def _load_module(spec: str):
+    p = Path(spec)
+    if spec.endswith(".py") or p.exists():
+        modspec = importlib.util.spec_from_file_location(
+            p.stem.replace("-", "_"), p)
+        if modspec is None or modspec.loader is None:
+            raise AnalysisError(f"cannot load lint-target file {spec!r}")
+        mod = importlib.util.module_from_spec(modspec)
+        try:
+            modspec.loader.exec_module(mod)
+        except Exception as e:      # noqa: BLE001
+            raise AnalysisError(
+                f"lint-target file {spec!r} failed to import: "
+                f"{type(e).__name__}: {e}") from e
+        return mod
+    try:
+        return importlib.import_module(spec)
+    except ImportError as e:
+        raise AnalysisError(
+            f"cannot import lint-target module {spec!r}: {e}") from e
+
+
+def _module_targets(mod) -> List[Any]:
+    if hasattr(mod, "LINT_TARGETS"):
+        return list(mod.LINT_TARGETS)
+    if hasattr(mod, "lint_targets"):
+        return list(mod.lint_targets())
+    raise AnalysisError(
+        f"module {mod.__name__!r} exposes neither LINT_TARGETS nor "
+        f"lint_targets()")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.lint",
+        description="Static modelability audit: lint kernels, count "
+                    "families, and model zoos without executing or "
+                    "timing a single kernel.")
+    ap.add_argument("targets", nargs="*",
+                    help="extra target modules (dotted path or .py file) "
+                         "exposing LINT_TARGETS or lint_targets()")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also audit the built-in Pallas kernel wrappers "
+                         "(repro.kernels.ops)")
+    ap.add_argument("--no-default", action="store_true",
+                    help="skip the default generator + model-zoo audits")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as deterministic JSON")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help="known-errors baseline file; exit 1 only on "
+                         "errors NOT listed in it")
+    ap.add_argument("--write-baseline", metavar="PATH",
+                    help="write the current error set as the new "
+                         "baseline and exit 0")
+    ap.add_argument("--suppress", action="append", default=[],
+                    metavar="CODE[@LOCATION]",
+                    help="suppress diagnostics by code or code@location "
+                         "(repeatable); suppressed findings stay in the "
+                         "JSON artifact but never fail the run")
+    return ap
+
+
+def run_lint(args: argparse.Namespace) -> int:
+    report = DiagnosticReport(stats={"timings": 0, "traces": 0})
+    with warnings.catch_warnings():
+        # generation-time lattice warnings are the runtime twin of the
+        # probe-lattice-divisibility diagnostic; the linter reports the
+        # static version and keeps its own output deterministic
+        warnings.simplefilter("ignore", LatticeAssumptionWarning)
+        if not args.no_default:
+            audit_generators(report)
+            audit_zoo(report)
+        if args.kernels:
+            from repro.analysis.targets import kernel_targets
+            audit_targets(report, kernel_targets())
+        for spec in args.targets:
+            audit_targets(report, _module_targets(_load_module(spec)))
+    report = report.suppress(args.suppress)
+
+    if args.write_baseline:
+        save_baseline(report, args.write_baseline)
+        print(f"wrote baseline with {len(report.baseline_keys())} "
+              f"error key(s) to {args.write_baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else []
+    new = report.new_errors(baseline)
+    if args.json:
+        payload = report.to_json_dict()
+        payload["new_errors"] = sorted(d.key for d in new)
+        print(json.dumps(payload, indent=2, sort_keys=True))
+    else:
+        print(report.render())
+        if args.baseline:
+            print(f"{len(new)} new error(s) vs baseline {args.baseline}")
+    return 1 if new else 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return run_lint(args)
+    except AnalysisError as e:
+        print(f"repro.lint: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,187 @@
+"""Jaxpr scope auditor: classify every primitive a kernel executes against
+the count vocabulary in :mod:`repro.core.counting` — statically.
+
+The counter's walker silently ignores any primitive it has no rule for;
+at predict time that surfaces (at best) as an unmodeled-feature diagnostic
+on features the kernel DOES produce, while work from ignored primitives
+vanishes from the cost model without a trace.  This auditor makes the gap
+visible up front:
+
+* ``unmodeled-primitive`` (error) — a primitive that performs real work
+  but earns no feature (the accuracy-vs-scope gap, statically located);
+* ``opaque-primitive`` (error) — a primitive carrying a sub-computation
+  the walker never enters (``pallas_call``, callbacks, custom calls): its
+  entire body is invisible to the counter;
+* ``while-trip-count`` (warning) — a ``while`` whose trip count is data
+  dependent; the counter charges its body exactly once per visit;
+* ``mixed-precision`` (warning) — arithmetic in ≥ 2 distinct float dtypes
+  in one kernel; per-dtype features keep them apart, but a model fitted
+  with a single-dtype battery cannot attribute the second dtype's cost;
+* ``data-dependent-access`` (info) — gather/scatter/dynamic-slice whose
+  indices are runtime values: counted by element traffic, but locality
+  (the actual cost driver) is invisible to shape-only analysis.
+
+Everything here runs on abstract values only — ``jax.make_jaxpr`` over
+``ShapeDtypeStruct`` inputs — so auditing never executes a kernel, never
+allocates device arrays, never times anything.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.core.counting import (
+    CONTROL_PRIMITIVES,
+    primitive_cost_class,
+)
+
+# primitives that wrap an inner computation the counting walker does NOT
+# recurse into — known-opaque by name; the generic sub-jaxpr sniff below
+# catches future ones
+_KNOWN_OPAQUE = frozenset({
+    "pallas_call", "custom_call", "pure_callback", "io_callback",
+    "debug_callback", "custom_partitioning", "xla_call",
+})
+
+_DATA_DEP = frozenset({"gather", "take", "dynamic_slice", "scatter",
+                       "scatter-add", "scatter_add",
+                       "dynamic_update_slice"})
+
+
+def _carries_jaxpr(params: Dict[str, Any]) -> bool:
+    """Does a primitive's param dict smuggle a jaxpr (directly, or in a
+    list/tuple of branches)?  Such a primitive wraps real computation."""
+    for v in params.values():
+        vals = v if isinstance(v, (list, tuple)) else (v,)
+        for x in vals:
+            if hasattr(x, "eqns") or hasattr(x, "jaxpr"):
+                return True
+    return False
+
+
+def _sub_jaxprs(eqn) -> List[Any]:
+    """The sub-jaxprs of a control-flow equation, mirroring exactly what
+    ``repro.core.counting._count_eqn`` recurses into."""
+    prim = eqn.primitive.name
+    if prim == "scan":
+        return [eqn.params["jaxpr"].jaxpr]
+    if prim == "while":
+        return [eqn.params["body_jaxpr"].jaxpr,
+                eqn.params["cond_jaxpr"].jaxpr]
+    if prim == "cond":
+        return [br.jaxpr for br in eqn.params["branches"]]
+    sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+    if sub is None:
+        return []
+    return [sub.jaxpr if hasattr(sub, "jaxpr") else sub]
+
+
+class _ScopeWalk:
+    """One kernel's classification pass: tallies per-primitive evidence
+    while recursing the same control-flow structure as the counter."""
+
+    def __init__(self):
+        self.unmodeled: Counter = Counter()
+        self.opaque: Counter = Counter()
+        self.whiles = 0
+        self.data_dep: Counter = Counter()
+        self.arith_dtypes: Set[str] = set()
+
+    def walk(self, jaxpr) -> None:
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            cls = primitive_cost_class(prim)
+            if cls == "control":
+                if prim == "while":
+                    self.whiles += 1
+                for sub in _sub_jaxprs(eqn):
+                    self.walk(sub)
+                continue
+            if cls is None:
+                if prim in _KNOWN_OPAQUE or _carries_jaxpr(eqn.params):
+                    self.opaque[prim] += 1
+                else:
+                    self.unmodeled[prim] += 1
+                continue
+            if prim in _DATA_DEP:
+                self.data_dep[prim] += 1
+            if cls in ("arith", "special") and eqn.outvars:
+                dt = str(eqn.outvars[0].aval.dtype)
+                if dt.startswith(("float", "bfloat")):
+                    self.arith_dtypes.add(dt)
+
+
+def audit_jaxpr(jaxpr, location: str) -> List[Diagnostic]:
+    """Scope-audit one (already traced) jaxpr."""
+    w = _ScopeWalk()
+    w.walk(jaxpr)
+    out: List[Diagnostic] = []
+    for prim in sorted(w.unmodeled):
+        out.append(Diagnostic(
+            "error", "unmodeled-primitive", location,
+            f"primitive {prim!r} ({w.unmodeled[prim]}×) performs work the "
+            f"counter has no rule for — its cost silently vanishes from "
+            f"every model fitted on these counts",
+            details={"primitive": prim, "occurrences": w.unmodeled[prim]}))
+    for prim in sorted(w.opaque):
+        out.append(Diagnostic(
+            "error", "opaque-primitive", location,
+            f"primitive {prim!r} ({w.opaque[prim]}×) wraps a "
+            f"sub-computation the counter never enters — its entire body "
+            f"is invisible to the cost model",
+            details={"primitive": prim, "occurrences": w.opaque[prim]}))
+    if w.whiles:
+        out.append(Diagnostic(
+            "warning", "while-trip-count", location,
+            f"{w.whiles} `while` loop(s) with data-dependent trip count: "
+            f"the counter charges each body exactly once, so any "
+            f"iteration beyond the first is uncounted work",
+            details={"occurrences": w.whiles}))
+    if len(w.arith_dtypes) >= 2:
+        dts = sorted(w.arith_dtypes)
+        out.append(Diagnostic(
+            "warning", "mixed-precision", location,
+            f"arithmetic in {len(dts)} float dtypes ({', '.join(dts)}): "
+            f"per-dtype features separate the counts, but a model "
+            f"calibrated on a single-dtype battery has no rate for the "
+            f"others", details={"dtypes": dts}))
+    for prim in sorted(w.data_dep):
+        out.append(Diagnostic(
+            "info", "data-dependent-access", location,
+            f"primitive {prim!r} ({w.data_dep[prim]}×) indexes with "
+            f"runtime values: element traffic is counted, but access "
+            f"locality — the actual cost driver — is invisible to "
+            f"shape-only analysis",
+            details={"primitive": prim, "occurrences": w.data_dep[prim]}))
+    return out
+
+
+def abstract_args(make_args) -> Tuple[Any, ...]:
+    """Abstract (shape/dtype-only) example arguments from a concrete
+    ``make_args`` builder, WITHOUT executing it: ``jax.eval_shape`` traces
+    the builder, so its rng/array constructions never run on a device."""
+    out = jax.eval_shape(make_args)
+    return tuple(out) if isinstance(out, (tuple, list)) else (out,)
+
+
+def audit_callable(fn, args: Sequence[Any], location: str,
+                   *, stats: Optional[Dict[str, int]] = None
+                   ) -> List[Diagnostic]:
+    """Trace ``fn`` abstractly at ``args`` (arrays or ShapeDtypeStructs)
+    and scope-audit the resulting jaxpr.  ``stats`` (when given) has its
+    ``"traces"`` entry incremented — the report's evidence that analysis
+    cost N abstract traces and zero executions."""
+    try:
+        jaxpr = jax.make_jaxpr(fn)(*args)
+    except Exception as e:          # noqa: BLE001 — any trace failure
+        return [Diagnostic(
+            "error", "untraceable-kernel", location,
+            f"jax.make_jaxpr failed: {type(e).__name__}: {e}",
+            details={"exception": type(e).__name__})]
+    finally:
+        if stats is not None:
+            stats["traces"] = stats.get("traces", 0) + 1
+    return audit_jaxpr(jaxpr.jaxpr, location)

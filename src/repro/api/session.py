@@ -277,6 +277,64 @@ class PerfSession:
         )
 
     # ------------------------------------------------------------------
+    # static modelability audit
+    # ------------------------------------------------------------------
+
+    def audit(self, items: Optional[Sequence[PredictItem]] = None, *,
+              model: Optional[str] = None):
+        """Static modelability audit of this session — no kernel runs, no
+        timings, only abstract traces (the report's ``stats`` prove it).
+
+        Audits the resolved fit's identifiability against the profile's
+        held-out battery (when the profile carries one), plus — for each
+        given predict item — the jaxpr scope, cache-signature hazards,
+        and any counted work outside the model's scope
+        (``out-of-scope-feature``, the static twin of ``strict=True``
+        prediction).  Returns a
+        :class:`repro.analysis.DiagnosticReport`."""
+        from repro.analysis import DiagnosticReport, Diagnostic
+        from repro.analysis.identifiability import analyze_model
+        from repro.analysis.scope import abstract_args, audit_callable
+        from repro.analysis.sighazards import audit_signature
+        from repro.core.counting import count_fn
+
+        fit_name, _mf, m = self._resolve_model(model)
+        report = DiagnosticReport(stats={"timings": 0, "traces": 0})
+        holdout = self.profile.holdout
+        if holdout is not None and len(holdout):
+            report.extend(analyze_model(
+                m, m.align(holdout, missing="zero"),
+                f"model:{fit_name}[holdout]"))
+        for idx, item in enumerate(items or ()):
+            kname, _key, _sig = self._item_identity(item, idx)
+            loc = f"kernel:{kname}"
+            if isinstance(item, MeasurementKernel):
+                fn, args = item.fn, abstract_args(item.make_args)
+            elif isinstance(item, tuple):
+                fn, args = item
+            else:
+                fn, args = item, ()
+            report.extend(audit_callable(fn, args, loc,
+                                         stats=report.stats))
+            report.extend(audit_signature(fn, loc))
+            try:
+                counts = count_fn(fn, *args)
+                report.stats["traces"] += 1
+            except Exception:   # noqa: BLE001 — already diagnosed above
+                continue
+            extra = m.unmodeled_features(counts)
+            if extra:
+                report.extend([Diagnostic(
+                    "warning", "out-of-scope-feature", loc,
+                    f"kernel performs counted work model {fit_name!r} "
+                    f"has no term for: {', '.join(sorted(extra))} — "
+                    f"predictions silently omit that cost "
+                    f"(strict=True prediction would refuse)",
+                    details={"features": sorted(extra),
+                             "model": fit_name})])
+        return report
+
+    # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
 

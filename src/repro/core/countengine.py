@@ -32,8 +32,12 @@ trace per shape, and the engine counts every such trace.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import json
+import re
+import time
+from dataclasses import dataclass
 from fractions import Fraction
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -70,26 +74,38 @@ def _source_of(fn: Callable) -> str:
     return sig
 
 
-def _state_digest(value: Any, depth: int, seen: frozenset
-                  ) -> Optional[str]:
+def _note(reasons: Optional[List[str]], why: str) -> None:
+    if reasons is not None:
+        reasons.append(why)
+
+
+def _state_digest(value: Any, depth: int, seen: frozenset,
+                  reasons: Optional[List[str]] = None) -> Optional[str]:
     """Stable digest of one piece of captured callable state (a closure
     cell, default argument, or bound ``self``), or None when no stable
     digest exists.  Conservative by design: an un-digestable value makes
     the whole callable unsignable (→ per-shape tracing), never a wrong
-    cache key."""
+    cache key.  ``reasons`` (when given) collects WHY a digest failed —
+    the raw material of :func:`signature_hazards`."""
     if depth > 3:
+        _note(reasons, "captured state nests deeper than 3 levels")
         return None
     if isinstance(value, (int, float, bool, str, bytes, type(None))):
         return repr(value)
+    if isinstance(value, np.dtype):
+        # immutable with a canonical string form — a captured dtype (the
+        # `dt = _dtype(dtype)` idiom of every UIPiCK builder) must not
+        # make a kernel unsignable
+        return f"dtype:{value.str}"
     if isinstance(value, (tuple, list)):
-        parts = [_state_digest(v, depth + 1, seen) for v in value]
+        parts = [_state_digest(v, depth + 1, seen, reasons) for v in value]
         if any(p is None for p in parts):
             return None
         return f"{type(value).__name__}({','.join(parts)})"  # type: ignore
     if isinstance(value, dict):
         parts = []
         for k in sorted(value, key=repr):
-            dv = _state_digest(value[k], depth + 1, seen)
+            dv = _state_digest(value[k], depth + 1, seen, reasons)
             if dv is None:
                 return None
             parts.append(f"{k!r}:{dv}")
@@ -105,6 +121,10 @@ def _state_digest(value: Any, depth: int, seen: frozenset
             # large captured arrays: hashing every byte on the serving hot
             # path defeats the point; shapes alone are not sound identity
             # (trace-time python branching may read values) — bail out
+            _note(reasons,
+                  f"captured array {arr.dtype}{list(arr.shape)} has "
+                  f"{arr.size} elements (> 65536): hashing it per lookup "
+                  f"would defeat the cache, shapes alone are unsound")
             return None
         return (f"{arr.dtype}[{','.join(map(str, arr.shape))}]:"
                 f"{hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:12]}")
@@ -114,14 +134,41 @@ def _state_digest(value: Any, depth: int, seen: frozenset
             # callable's own source already identifies it — a fixed marker
             # keeps the digest deterministic without recursing forever
             return "<cycle>"
-        inner = _signature(value, depth + 1, seen | {id(value)})
+        inner = _signature(value, depth + 1, seen | {id(value)}, reasons)
         return inner if inner else None
+    _note(reasons,
+          f"captured value of type {type(value).__name__!r} has no "
+          f"stable content digest")
     return None
 
 
-def _signature(fn: Callable, depth: int, seen: frozenset) -> str:
+def _signature(fn: Callable, depth: int, seen: frozenset,
+               reasons: Optional[List[str]] = None) -> str:
+    # transparent wrappers first: a partial signs as its target plus a
+    # digest of the bound arguments, and a sourceless wrapper honoring the
+    # __wrapped__ protocol (jit's PjitFunction, functools.wraps) signs as
+    # what it wraps — neither changes what the traced jaxpr counts
+    if isinstance(fn, functools.partial):
+        if id(fn.func) in seen:
+            return ""
+        inner = _signature(fn.func, depth, seen | {id(fn.func)}, reasons)
+        if not inner:
+            return ""
+        bound = _state_digest([list(fn.args), dict(fn.keywords)],
+                              depth, seen, reasons)
+        if bound is None:
+            return ""
+        return f"partial({inner};{bound})"
     src = _source_of(fn)
     if not src:
+        wrapped = getattr(fn, "__wrapped__", None)
+        if wrapped is not None and id(wrapped) not in seen:
+            inner = _signature(wrapped, depth, seen | {id(wrapped)},
+                               reasons)
+            return f"wrapped({inner})" if inner else ""
+        _note(reasons,
+              f"callable {getattr(fn, '__name__', fn)!r} has no "
+              f"retrievable source (REPL/exec or builtin)")
         return ""
     parts: List[str] = [src]
     # a bound method's behavior depends on instance state: digest self and
@@ -129,7 +176,7 @@ def _signature(fn: Callable, depth: int, seen: frozenset) -> str:
     inner = getattr(fn, "__func__", None)
     if inner is not None:
         self_digest = _state_digest(getattr(fn, "__self__", None),
-                                    depth, seen)
+                                    depth, seen, reasons)
         if self_digest is None:
             return ""
         parts.append(f"self:{self_digest}")
@@ -140,11 +187,13 @@ def _signature(fn: Callable, depth: int, seen: frozenset) -> str:
         try:
             state.append(cell.cell_contents)
         except ValueError:       # still-empty cell: no stable identity
+            _note(reasons, "closure cell is still empty (recursive "
+                           "definition not yet bound)")
             return ""
     state += list(getattr(fn, "__defaults__", None) or ())
     state += [v for _, v in sorted(kwdefaults.items())]
     for value in state:
-        digest = _state_digest(value, depth, seen)
+        digest = _state_digest(value, depth, seen, reasons)
         if digest is None:
             return ""
         parts.append(digest)
@@ -159,8 +208,10 @@ def _signature(fn: Callable, depth: int, seen: frozenset) -> str:
         for name in sorted(_referenced_names(code)):
             if name not in fn_globals:
                 continue
-            digest = _state_digest(fn_globals[name], depth, seen)
+            digest = _state_digest(fn_globals[name], depth, seen, reasons)
             if digest is None:
+                _note(reasons, f"(the undigestable value above is the "
+                               f"module-level global {name!r})")
                 return ""
             parts.append(f"g:{name}={digest}")
     return hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
@@ -184,6 +235,21 @@ def callable_signature(fn: Callable) -> str:
     traced jaxpr looks like).  Returns ``""`` when no sound identity
     exists; such callables are traced per shape."""
     return _signature(fn, 0, frozenset({id(fn)}))
+
+
+def signature_hazards(fn: Callable) -> List[str]:
+    """Why ``fn`` signs as ``""`` — one human-readable reason per
+    undigestable piece of captured state, empty when the callable IS
+    signable.  The same walk as :func:`callable_signature` (same
+    conservative rules), run once with a reason collector: the static
+    cache-signature hazard detector (``repro.analysis.sighazards``) turns
+    these into diagnostics instead of letting the ``""`` signature
+    silently defeat :class:`CountEngine` dedup at serving time."""
+    reasons: List[str] = []
+    sig = _signature(fn, 0, frozenset({id(fn)}), reasons)
+    if sig:
+        return []
+    return reasons or ["callable has no stable content identity"]
 
 
 def args_signature(args: Sequence[Any]) -> str:
@@ -234,6 +300,34 @@ def _symbolic_from_json(payload: Dict[str, Any]) -> SymbolicCounts:
     counts = {str(fid): ParametricCount(_poly_from_json(terms), assumptions)
               for fid, terms in payload["counts"].items()}
     return SymbolicCounts(counts, assumptions)
+
+
+# ---------------------------------------------------------------------------
+# count-store eviction
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CountStoreGCStats:
+    """Outcome of one :meth:`CountEngine.gc` sweep, mirroring the
+    measurement cache's :class:`~repro.profiles.cache.GCStats` shape.
+    Counts are machine-independent, so there is no foreign-fingerprint
+    class; an entry whose embedded key disagrees with its filename counts
+    as corrupt (hand-edited or mis-copied files are never trusted)."""
+
+    kept: int = 0
+    dropped_old: int = 0
+    dropped_corrupt: int = 0
+    dropped_schema: int = 0
+
+    @property
+    def dropped(self) -> int:
+        return self.dropped_old + self.dropped_corrupt + self.dropped_schema
+
+
+# count-store entries are named by the full 64-hex SHA-256 of their key —
+# anything else under counts/ or families/ is not ours to delete
+_STORE_ENTRY_NAME = re.compile(r"[0-9a-f]{64}\.json")
 
 
 # ---------------------------------------------------------------------------
@@ -437,6 +531,60 @@ class CountEngine:
 
         path.parent.mkdir(parents=True, exist_ok=True)
         atomic_write_json(path, payload)
+
+    # -- eviction ------------------------------------------------------------
+    def gc(self, *, max_age: Optional[float] = None,
+           now: Optional[float] = None) -> CountStoreGCStats:
+        """Evict stale persisted counts (the ROADMAP count-store GC item),
+        mirroring :meth:`~repro.profiles.cache.MeasurementCache.gc`.
+
+        Sweeps both tiers (``counts/`` and ``families/``) and drops, in
+        order of precedence: corrupt files (unparseable, not entry-shaped,
+        or embedded key ≠ filename stem — a mis-copied or hand-edited file
+        can never match a lookup), entries written under a different
+        ``COUNT_STORE_VERSION`` (permanently dead weight), and entries
+        older than ``max_age`` seconds by file mtime.  Files not named by
+        a 64-hex digest are never ours to touch.  In-process memos are
+        untouched: GC governs the persistent tier only.
+        """
+        if now is None:
+            now = time.time()
+        kept = old = corrupt = stale_schema = 0
+        if self.store is None:
+            return CountStoreGCStats()
+        for sub in ("counts", "families"):
+            tier = self.store / sub
+            if not tier.is_dir():
+                continue
+            for path in sorted(tier.glob("*.json")):
+                if not _STORE_ENTRY_NAME.fullmatch(path.name):
+                    continue
+                try:
+                    mtime = path.stat().st_mtime
+                except OSError:
+                    continue    # vanished under a concurrent sweep
+                try:
+                    payload = json.loads(path.read_text())
+                    if not isinstance(payload, dict) \
+                            or payload.get("key") != path.stem \
+                            or not isinstance(payload.get("counts"), dict):
+                        raise ValueError("not a count-store entry")
+                except (OSError, ValueError):
+                    path.unlink(missing_ok=True)
+                    corrupt += 1
+                    continue
+                if payload.get("version") != COUNT_STORE_VERSION:
+                    path.unlink(missing_ok=True)
+                    stale_schema += 1
+                    continue
+                if max_age is not None and now - mtime > max_age:
+                    path.unlink(missing_ok=True)
+                    old += 1
+                    continue
+                kept += 1
+        return CountStoreGCStats(kept=kept, dropped_old=old,
+                                 dropped_corrupt=corrupt,
+                                 dropped_schema=stale_schema)
 
     # -- observability -------------------------------------------------------
     def stats(self) -> Dict[str, int]:

@@ -101,6 +101,66 @@ _REDUCE = {"reduce_sum": "add", "reduce_max": "cmp", "reduce_min": "cmp",
            "reduce_and": "add", "reduce_or": "add"}
 
 
+# ---------------------------------------------------------------------------
+# Count vocabulary (exported for the static scope auditor, repro.analysis)
+# ---------------------------------------------------------------------------
+
+# control-flow primitives the walker RECURSES into (their cost is their
+# body's cost, possibly times a trip count) — must list exactly the prims
+# _count_eqn handles structurally, or the auditor would misclassify them
+CONTROL_PRIMITIVES = frozenset({
+    "scan", "while", "cond", "pjit", "closed_call", "core_call", "remat",
+    "checkpoint", "custom_jvp_call", "custom_vjp_call",
+    "custom_vjp_call_jaxpr", "shard_map",
+})
+
+# primitives the counter DELIBERATELY treats as free.  These never earn a
+# feature: predicates/bit ops ride along with the selects and arithmetic
+# they gate, rng plumbing builds example inputs rather than kernel work,
+# and the metadata prims exist only at trace time.  Everything the walker
+# skips that is NOT in this set is an unmodeled gap — the scope auditor's
+# reason to exist.
+ZERO_COST_PRIMITIVES = frozenset({
+    # predicates and boolean/bit bookkeeping
+    "lt", "le", "gt", "ge", "eq", "ne", "and", "or", "not", "xor",
+    "shift_left", "shift_right_logical", "shift_right_arithmetic",
+    "population_count", "clz", "sign", "is_finite",
+    # rng plumbing (input fabrication, not kernel work)
+    "random_seed", "random_bits", "random_fold_in", "random_wrap",
+    "random_unwrap", "threefry2x32",
+    # trace-time metadata
+    "stop_gradient", "device_put", "create_token", "optimization_barrier",
+    "reduce_precision", "sharding_constraint", "split",
+})
+
+# primitives with bespoke counting rules in _count_eqn (not table-driven)
+_SPECIAL = frozenset({"dot_general", "integer_pow", "sort"})
+
+
+def primitive_cost_class(prim: str) -> Optional[str]:
+    """Classify one primitive name against the counter's vocabulary:
+    ``"arith"``/``"reduce"``/``"memory"``/``"collective"``/``"special"``
+    (all counted), ``"control"`` (recursed into), ``"zero"`` (deliberately
+    free), or ``None`` — the primitive does work the counter has no rule
+    for (an unmodeled scope gap, the scope auditor's error class)."""
+    if prim in _ARITH:
+        return "arith"
+    if prim in _REDUCE:
+        return "reduce"
+    if prim in _MEM_GATHER or prim in _MEM_SCATTER or prim in _MEM_STRIDED \
+            or prim in _MEM_CONCAT or prim in _MEM_CONTIG:
+        return "memory"
+    if prim in _COLLECTIVES:
+        return "collective"
+    if prim in _SPECIAL:
+        return "special"
+    if prim in CONTROL_PRIMITIVES:
+        return "control"
+    if prim in ZERO_COST_PRIMITIVES:
+        return "zero"
+    return None
+
+
 def _count_eqn(eqn, counts: FeatureCounts, mult: float):
     prim = eqn.primitive.name
     out_aval = eqn.outvars[0].aval if eqn.outvars else None

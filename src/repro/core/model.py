@@ -343,6 +343,38 @@ class Model:
         return {k: float(v) for k, v in sorted(counts.items())
                 if k not in known and not k.startswith("_") and float(v)}
 
+    def param_feature_map(self) -> Dict[str, List[str]]:
+        """Which features each parameter multiplies: parameter name → the
+        sorted feature names appearing in the same top-level additive
+        terms.  Two parameters sharing an identical feature list are
+        *structurally* suspect (their design-matrix columns can only
+        differ through nonlinearity) — the identifiability analyzer uses
+        this to NAME the features behind a collinear parameter pair
+        instead of just reporting an abstract rank defect."""
+        out: Dict[str, set] = {p: set() for p in self.param_names}
+        for _sign, node in _signed_terms(self._tree.body):
+            names = {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+            feats = {n for n in names if n.startswith("f_")}
+            for p in names:
+                if p.startswith("p_"):
+                    out[p] |= feats
+        return {p: sorted(fs) for p, fs in out.items()}
+
+    def param_jacobian(self, p_vec: jax.Array, features: jax.Array
+                       ) -> np.ndarray:
+        """``∂ prediction / ∂ parameters`` at one parameter point:
+        ``[n_rows, n_params]`` float64, rows aligned with ``features``
+        (same column conventions as :meth:`batched_eval`), columns ordered
+        as ``self.param_names``.  This IS the least-squares design matrix
+        of a fit linearized at ``p_vec`` — exact for linear models at any
+        point — and the raw material of the static identifiability
+        analysis (``repro.analysis.identifiability``)."""
+        dt = _param_dtype()
+        F = jnp.asarray(features, dt)
+        J = jax.jacfwd(lambda p: self.batched_eval(p, F))(
+            jnp.asarray(p_vec, dt))
+        return np.asarray(J, np.float64)
+
     def batched_eval(self, p_vec: jax.Array, features: jax.Array
                      ) -> jax.Array:
         """Vectorized evaluation: ``features`` is ``[n_rows, n_features]``

@@ -22,6 +22,7 @@ import inspect
 import itertools
 import json
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
 
@@ -240,6 +241,7 @@ class Generator:
                 space[arg] = allowed
         names = sorted(space)
         families: Dict[Tuple, Optional[KernelFamily]] = {}
+        warned: set = set()
         for combo in itertools.product(*(space[n] for n in names)):
             kw = dict(zip(names, combo))
             try:
@@ -255,11 +257,36 @@ class Generator:
                 if fixed_key not in families:
                     families[fixed_key] = self._family_of(kw)
                 kernel.family = families[fixed_key]
+            fam = kernel.family
+            if fam is not None and fam.scale > 1:
+                for var in fam.var_degrees:
+                    size = int(kernel.sizes.get(var, 0))
+                    if size % fam.scale and (var, size) not in warned:
+                        warned.add((var, size))
+                        warnings.warn(
+                            f"generator {self.name!r}: requested size "
+                            f"{var}={size} violates the symbolic family's "
+                            f"probe-lattice assumption "
+                            f"{var} % {fam.scale} == 0 — the count "
+                            f"polynomial extrapolates off the verified "
+                            f"lattice", LatticeAssumptionWarning,
+                            stacklevel=2)
             yield kernel
 
 
 class _SkipVariant(Exception):
     """Raised by builders for incoherent argument combinations."""
+
+
+class LatticeAssumptionWarning(UserWarning):
+    """A requested kernel size violates its symbolic family's probe-lattice
+    divisibility assumption (``var % scale == 0``).  The family polynomial
+    is still evaluated at that size — counts of the built-in families are
+    genuinely polynomial everywhere — but the reconstruction was only
+    *verified* on the lattice, so off-lattice sizes are extrapolation the
+    probe grid never witnessed.  Emitted by :meth:`Generator.variants`
+    (and surfaced as a ``probe-lattice-divisibility`` diagnostic by
+    ``repro.analysis``)."""
 
 
 def _parse_value(s: str) -> Any:

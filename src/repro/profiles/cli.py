@@ -121,6 +121,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="re-time battery rows whose relative wall-clock "
                          "std exceeds this threshold (noisy-row "
                          "re-measurement heuristic)")
+    ap.add_argument("--force", action="store_true",
+                    help="with --zoo: fit even when the static "
+                         "identifiability analysis finds zoo rungs the "
+                         "battery cannot determine (their fitted values "
+                         "are arbitrary along the null space)")
     return ap
 
 
@@ -184,7 +189,7 @@ def _calibrate(argv: Optional[List[str]]) -> int:
                 holdout_fraction=args.holdout_fraction,
                 match=_MATCH[args.match],
                 retime_rel_std=args.retime_rel_std,
-                engine=engine)
+                engine=engine, force=args.force)
         except StudyError as e:
             print(f"[calibrate] {e}", file=sys.stderr)
             return 2
@@ -268,6 +273,12 @@ def _cmd_predict(argv: List[str]) -> int:
     ap.add_argument("--strict-scope", action="store_true",
                     help="error on kernels whose counted work the model "
                          "has no term for")
+    ap.add_argument("--audit", action="store_true",
+                    help="print the static modelability audit of the "
+                         "selected kernels against the fit (scope gaps, "
+                         "signature hazards, holdout identifiability) "
+                         "before predicting — observability only, never "
+                         "changes the exit code")
     ap.add_argument("--expect-zero-timings", action="store_true",
                     help="exit 1 if any kernel timing pass ran (they "
                          "never should during prediction)")
@@ -285,6 +296,10 @@ def _cmd_predict(argv: List[str]) -> int:
         print(f"[predict] no measurement kernels match tags "
               f"{args.tags!r}", file=sys.stderr)
         return 2
+    if args.audit:
+        report = session.audit(kernels, model=args.model)
+        for line in report.render().splitlines():
+            print(f"[audit] {line}")
     try:
         preds = session.predict_batch(kernels, model=args.model,
                                       strict=args.strict_scope)
@@ -438,6 +453,10 @@ def _cmd_gc(argv: List[str]) -> int:
                     help="also drop entries older than this many seconds")
     ap.add_argument("--keep-foreign", action="store_true",
                     help="keep entries from other device fingerprints")
+    ap.add_argument("--counts", action="store_true",
+                    help="also sweep the count-engine store (cached "
+                         "concrete counts + symbolic family "
+                         "reconstructions) beside the measurement cache")
     args = ap.parse_args(argv)
 
     cache = MeasurementCache(args.cache_dir, DeviceFingerprint.local())
@@ -447,6 +466,14 @@ def _cmd_gc(argv: List[str]) -> int:
           f"dropped_old={stats.dropped_old} "
           f"dropped_corrupt={stats.dropped_corrupt} "
           f"dropped_schema={stats.dropped_schema}")
+    if args.counts:
+        from repro.core.countengine import CountEngine
+        cstats = CountEngine(store=cache.count_store).gc(
+            max_age=args.max_age)
+        print(f"[gc] counts: kept={cstats.kept} "
+              f"dropped_old={cstats.dropped_old} "
+              f"dropped_corrupt={cstats.dropped_corrupt} "
+              f"dropped_schema={cstats.dropped_schema}")
     return 0
 
 

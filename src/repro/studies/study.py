@@ -73,6 +73,7 @@ def run_study(
     match: MatchCondition = MatchCondition.INTERSECT,
     retime_rel_std: Optional[float] = None,
     engine: Optional[Any] = None,
+    force: bool = False,
 ) -> MachineProfile:
     """One machine's full study: gather once, fit the whole zoo, persist
     fits + held-out rows into a single profile.
@@ -83,7 +84,14 @@ def run_study(
     ``retimed_rows`` (observability — not serialized).  ``engine`` is an
     optional :class:`~repro.core.countengine.CountEngine`: battery counts
     then come from symbolic kernel families (vectorized polynomial
-    evaluation) instead of one trace per kernel."""
+    evaluation) instead of one trace per kernel.
+
+    Before fitting, every zoo rung's identifiability over the train split
+    is statically analyzed (:mod:`repro.analysis.identifiability`); a
+    rung whose parameters the battery cannot determine aborts the study
+    with :class:`StudyError` — its fitted values would be arbitrary along
+    the null space, poisoning cross-machine comparisons — unless
+    ``force=True`` (CLI ``--force``) explicitly accepts that."""
     entries = list(entries)
     if not entries:
         raise StudyError("a study needs at least one zoo entry")
@@ -117,6 +125,27 @@ def run_study(
             f"train split has {len(train)} rows but the widest zoo model "
             f"has {widest} parameters — an underdetermined fit would "
             f"'converge' to arbitrary values; widen the battery tags")
+    if not force:
+        from repro.analysis.diagnostics import sort_key
+        from repro.analysis.identifiability import analyze_model
+
+        structural = []
+        for name in sorted(models):
+            m = models[name]
+            structural += [
+                d for d in analyze_model(
+                    m, m.align(train, missing="zero"),
+                    f"model:{name}[train]")
+                if d.severity == "error"]
+        if structural:
+            raise StudyError(
+                "the train split cannot identify every zoo rung's "
+                "parameters — fitted values would be arbitrary along the "
+                "null space:\n  "
+                + "\n  ".join(d.render()
+                              for d in sorted(structural, key=sort_key))
+                + "\nWiden the battery tags (or pass force=True / "
+                  "--force to fit anyway)")
     fits = fit_models(models, train,
                       nonneg={e.name: e.nonneg for e in entries})
     profile = MachineProfile(

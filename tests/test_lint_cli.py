@@ -1,0 +1,186 @@
+"""``python -m repro.lint`` — golden-file behavior of the auditor CLI.
+
+Every test in this module runs with kernel execution POISONED: timing or
+jit-compiling any :class:`MeasurementKernel` raises immediately.  The
+whole CLI — default generator + zoo scope included — must pass under
+that regime; this is the PR's zero-execution acceptance proof, together
+with the report's own ``timings=0`` stats line.
+
+The other pinned properties: ``--json`` output is byte-identical across
+runs and sorted by ``(severity, location, code, message)``; fixture
+kernels surface ≥ 4 distinct diagnostic classes; the baseline workflow
+(write → pass → regress → fail) and ``--suppress`` drive the exit code;
+unknown targets exit 2, never traceback.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.cli import main
+from repro.core.uipick import MeasurementKernel
+
+REPO = Path(__file__).resolve().parents[1]
+
+FIXTURE_MODULE = '''\
+"""Lint fixtures: one kernel per defect class (audited abstractly)."""
+import types
+
+import jax
+import jax.numpy as jnp
+
+X = jax.ShapeDtypeStruct((64,), jnp.float32)
+
+
+def unmodeled(x):
+    return jnp.cumprod(x)
+
+
+def trip(x):
+    return jax.lax.while_loop(
+        lambda c: c[1] < 5, lambda c: (c[0] * 1.5, c[1] + 1), (x, 0))[0]
+
+
+def mixed(x):
+    return (x.astype(jnp.bfloat16) * 2).astype(jnp.float32) + x * 3
+
+
+def take(x):
+    return jnp.take(x, jnp.zeros((4,), jnp.int32))
+
+
+LINT_TARGETS = [
+    types.SimpleNamespace(name=f.__name__, fn=f, args=(X,))
+    for f in (unmodeled, trip, mixed, take)
+]
+'''
+
+
+@pytest.fixture(autouse=True)
+def no_execution(monkeypatch):
+    def boom(self, *a, **k):
+        raise AssertionError("repro.lint must never execute a kernel")
+
+    monkeypatch.setattr(MeasurementKernel, "time", boom)
+    monkeypatch.setattr(MeasurementKernel, "time_stats", boom)
+    monkeypatch.setattr(MeasurementKernel, "jitted", boom)
+
+
+@pytest.fixture()
+def fixture_module(tmp_path):
+    path = tmp_path / "lint_fixtures.py"
+    path.write_text(FIXTURE_MODULE)
+    return str(path)
+
+
+def _run_json(capsys, argv):
+    code = main(argv)
+    return code, json.loads(capsys.readouterr().out)
+
+
+def test_fixture_kernels_surface_four_diagnostic_classes(
+        capsys, fixture_module):
+    code, payload = _run_json(
+        capsys, ["--no-default", "--json", fixture_module])
+    codes = {d["code"] for d in payload["diagnostics"]}
+    assert {"unmodeled-primitive", "while-trip-count", "mixed-precision",
+            "data-dependent-access"} <= codes
+    assert payload["stats"] == {"timings": 0, "traces": 4}
+    assert code == 1                    # un-baselined error → fail
+
+
+def test_json_output_is_byte_identical_across_runs(capsys, fixture_module):
+    main(["--no-default", "--json", fixture_module])
+    first = capsys.readouterr().out
+    main(["--no-default", "--json", fixture_module])
+    second = capsys.readouterr().out
+    assert first == second
+
+
+def test_diagnostics_sorted_by_severity_then_location(
+        capsys, fixture_module):
+    _code, payload = _run_json(
+        capsys, ["--no-default", "--json", fixture_module])
+    rank = {"error": 0, "warning": 1, "info": 2}
+    keys = [(rank[d["severity"]], d["location"], d["code"], d["message"])
+            for d in payload["diagnostics"]]
+    assert keys == sorted(keys)
+    assert len(keys) >= 4
+
+
+def test_baseline_workflow_write_pass_regress(capsys, tmp_path,
+                                              fixture_module):
+    baseline = tmp_path / "baseline.json"
+    assert main(["--no-default", fixture_module,
+                 "--write-baseline", str(baseline)]) == 0
+    capsys.readouterr()
+    # adopted errors no longer fail the run
+    code, payload = _run_json(
+        capsys, ["--no-default", "--json", fixture_module,
+                 "--baseline", str(baseline)])
+    assert code == 0 and payload["new_errors"] == []
+    # an emptied baseline turns them back into regressions
+    baseline.write_text(json.dumps({"version": 1, "errors": []}))
+    code, payload = _run_json(
+        capsys, ["--no-default", "--json", fixture_module,
+                 "--baseline", str(baseline)])
+    assert code == 1
+    assert payload["new_errors"] == ["unmodeled-primitive@kernel:unmodeled"]
+
+
+def test_suppress_moves_findings_out_of_the_exit_code(
+        capsys, fixture_module):
+    code, payload = _run_json(
+        capsys, ["--no-default", "--json", fixture_module,
+                 "--suppress", "unmodeled-primitive"])
+    assert code == 0
+    assert all(d["code"] != "unmodeled-primitive"
+               for d in payload["diagnostics"])
+    assert any(d["code"] == "unmodeled-primitive"
+               for d in payload["suppressed"])
+
+
+def test_unknown_module_exits_2(capsys):
+    assert main(["--no-default", "no_such_module_xyz"]) == 2
+    assert "repro.lint" in capsys.readouterr().err
+
+
+def test_module_without_targets_exits_2(tmp_path, capsys):
+    empty = tmp_path / "empty_mod.py"
+    empty.write_text("VALUE = 1\n")
+    assert main(["--no-default", str(empty)]) == 2
+    assert "lint_targets" in capsys.readouterr().err
+
+
+def test_default_scope_is_clean_and_execution_free(capsys):
+    """The repo's own generators + zoo pass their own linter — with
+    execution poisoned, over the full default scope."""
+    code, payload = _run_json(capsys, ["--json"])
+    assert code == 0
+    assert payload["counts"]["error"] == 0
+    assert payload["stats"]["timings"] == 0
+    assert payload["stats"]["traces"] > 0
+    codes = {d["code"] for d in payload["diagnostics"]}
+    assert "probe-lattice-divisibility" in codes
+
+
+def test_kernel_wrappers_match_committed_baseline(capsys):
+    """The Pallas wrappers are opaque to the counter by design; the
+    checked-in CI baseline pins exactly that finding set."""
+    code, payload = _run_json(
+        capsys, ["--kernels", "--no-default", "--json",
+                 "--baseline", str(REPO / "lint_baseline.json")])
+    assert code == 0 and payload["new_errors"] == []
+    codes = {d["code"] for d in payload["diagnostics"]}
+    assert codes == {"opaque-primitive"}
+
+
+def test_example_module_lints_clean(capsys):
+    """Satellite: examples/autotune_variants.py exposes lint_targets()
+    and audits clean (abstractly — importing it times nothing)."""
+    code, payload = _run_json(
+        capsys, ["--no-default", "--json",
+                 str(REPO / "examples" / "autotune_variants.py")])
+    assert code == 0
+    assert payload["counts"]["error"] == 0
+    assert payload["stats"]["timings"] == 0
