@@ -14,6 +14,9 @@ Submodules:
   deterministic reports, suppression, CI baselines;
 * :mod:`~repro.analysis.scope` — jaxpr scope auditor (modeled vs
   unmodeled vs opaque primitives, data-dependent loops, mixed precision);
+* :mod:`~repro.analysis.pallascost` — static Pallas cost analyzer:
+  grid-scaled kernel-body counts and block-spec HBM↔VMEM traffic, so
+  ``pallas_call`` is opened instead of flagged opaque;
 * :mod:`~repro.analysis.families` — ``FamilySpec`` degree validation by
   exact finite differencing over the probe lattice;
 * :mod:`~repro.analysis.identifiability` — design-matrix rank and
@@ -33,6 +36,13 @@ from repro.analysis.diagnostics import (
 )
 from repro.analysis.families import check_lattice, validate_family
 from repro.analysis.identifiability import analyze_model, audit_battery
+from repro.analysis.pallascost import (
+    OperandTraffic,
+    PallasCost,
+    PallasUnanalyzable,
+    analyze_pallas_call,
+    unanalyzable_reason,
+)
 from repro.analysis.scope import abstract_args, audit_callable, audit_jaxpr
 from repro.analysis.sighazards import audit_signature
 
@@ -41,8 +51,12 @@ __all__ = [
     "AnalysisError",
     "Diagnostic",
     "DiagnosticReport",
+    "OperandTraffic",
+    "PallasCost",
+    "PallasUnanalyzable",
     "abstract_args",
     "analyze_model",
+    "analyze_pallas_call",
     "audit_battery",
     "audit_callable",
     "audit_jaxpr",
@@ -50,5 +64,5 @@ __all__ = [
     "check_lattice",
     "load_baseline",
     "save_baseline",
-    "validate_family",
+    "unanalyzable_reason",
 ]

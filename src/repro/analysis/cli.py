@@ -22,13 +22,23 @@ either already-abstract ``args`` or a concrete ``make_args`` builder
 (``repro.core.uipick.MeasurementKernel`` and
 ``repro.core.variantselect.Variant`` both qualify as-is).
 
+``--all-combos`` widens the default generator audit from the first
+buildable variant to every distinct fixed-argument combination (scope +
+family sweeps; findings deduplicated, ``details["fixed"]`` names the
+audited combo).
+
 Exit status is 1 when error-severity diagnostics appear that are not in
 the ``--baseline`` file (CI mode: adopt today's findings once with
-``--write-baseline``, fail only on regressions), 0 otherwise.
+``--write-baseline``, fail only on regressions), 0 otherwise.  Baselined
+errors that NO LONGER occur are reported as stale (``stale_baseline`` in
+the JSON payload) and can be dropped from the file with
+``--prune-baseline`` — a stale entry would otherwise mask the next
+regression at the same ``code@location``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import importlib
 import importlib.util
 import itertools
@@ -36,9 +46,10 @@ import json
 import sys
 import warnings
 from pathlib import Path
-from typing import Any, Iterable, List, Optional, Sequence
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
 from repro.analysis.diagnostics import (
+    BASELINE_VERSION,
     AnalysisError,
     Diagnostic,
     DiagnosticReport,
@@ -73,23 +84,68 @@ def _first_kernel(gen: Generator):
     return None
 
 
+def _scope_kernels(gen: Generator, all_combos: bool
+                   ) -> List[Tuple[Any, Optional[dict]]]:
+    """Kernels to scope-audit: the first buildable variant by default, or
+    one representative per distinct fixed-argument combination under
+    ``--all-combos`` (non-size arguments select different kernel bodies —
+    variant/pattern/dtype switches the single-representative audit never
+    sees)."""
+    if not all_combos:
+        kernel = _first_kernel(gen)
+        return [(kernel, None)] if kernel is not None else []
+    names = sorted(gen.arg_space)
+    var_names = set(gen.family.var_degrees) if gen.family else set()
+    seen, out = set(), []
+    for combo in itertools.product(*(gen.arg_space[n] for n in names)):
+        kw = dict(zip(names, combo))
+        fixed = {a: v for a, v in kw.items() if a not in var_names}
+        key = tuple(sorted(fixed.items()))
+        if key in seen:
+            continue
+        try:
+            kernel = gen.build(**kw)
+        except _SkipVariant:
+            continue
+        seen.add(key)
+        out.append((kernel, fixed))
+    return out
+
+
 def audit_generators(report: DiagnosticReport,
-                     generators: Sequence[Generator] = tuple(ALL_GENERATORS)
-                     ) -> None:
-    """Scope + family + lattice + signature audits of UIPiCK generators."""
+                     generators: Sequence[Generator] = tuple(ALL_GENERATORS),
+                     *, all_combos: bool = False) -> None:
+    """Scope + family + lattice + signature audits of UIPiCK generators.
+
+    ``all_combos`` sweeps every distinct fixed-argument combination per
+    generator instead of the first buildable one; findings repeated
+    verbatim across combos appear once, with ``details["fixed"]`` naming
+    the combo that first surfaced them."""
     for gen in generators:
         loc = f"generator:{gen.name}"
-        kernel = _first_kernel(gen)
-        if kernel is None:
+        kernels = _scope_kernels(gen, all_combos)
+        if not kernels:
             report.extend([Diagnostic(
                 "error", "untraceable-kernel", loc,
                 "no argument-space combination builds a kernel")])
             continue
-        report.extend(audit_callable(
-            kernel.fn, abstract_args(kernel.make_args), loc,
-            stats=report.stats))
-        report.extend(audit_signature(kernel.fn, loc))
-        report.extend(validate_family(gen, stats=report.stats))
+        seen: set = set()
+        for kernel, fixed in kernels:
+            diags = list(audit_callable(
+                kernel.fn, abstract_args(kernel.make_args), loc,
+                stats=report.stats))
+            diags.extend(audit_signature(kernel.fn, loc))
+            for d in diags:
+                key = (d.severity, d.code, d.location, d.message)
+                if key in seen:
+                    continue
+                seen.add(key)
+                if fixed is not None and "fixed" not in d.details:
+                    d = dataclasses.replace(
+                        d, details={**dict(d.details), "fixed": fixed})
+                report.extend([d])
+        report.extend(validate_family(gen, stats=report.stats,
+                                      all_combos=all_combos))
         report.extend(check_lattice(gen))
 
 
@@ -181,14 +237,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "(repro.kernels.ops)")
     ap.add_argument("--no-default", action="store_true",
                     help="skip the default generator + model-zoo audits")
+    ap.add_argument("--all-combos", action="store_true",
+                    help="audit every distinct fixed-argument combination "
+                         "per generator (scope + family), not just the "
+                         "first buildable one; repeated findings are "
+                         "deduplicated, details name the audited combo")
     ap.add_argument("--json", action="store_true",
                     help="emit the report as deterministic JSON")
     ap.add_argument("--baseline", metavar="PATH",
                     help="known-errors baseline file; exit 1 only on "
-                         "errors NOT listed in it")
+                         "errors NOT listed in it (stale entries — "
+                         "baselined errors that no longer occur — are "
+                         "warned about)")
     ap.add_argument("--write-baseline", metavar="PATH",
                     help="write the current error set as the new "
                          "baseline and exit 0")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="with --baseline: rewrite the baseline file "
+                         "dropping stale entries (baselined errors that "
+                         "no longer occur)")
     ap.add_argument("--suppress", action="append", default=[],
                     metavar="CODE[@LOCATION]",
                     help="suppress diagnostics by code or code@location "
@@ -205,7 +272,7 @@ def run_lint(args: argparse.Namespace) -> int:
         # static version and keeps its own output deterministic
         warnings.simplefilter("ignore", LatticeAssumptionWarning)
         if not args.no_default:
-            audit_generators(report)
+            audit_generators(report, all_combos=args.all_combos)
             audit_zoo(report)
         if args.kernels:
             from repro.analysis.targets import kernel_targets
@@ -220,16 +287,36 @@ def run_lint(args: argparse.Namespace) -> int:
               f"error key(s) to {args.write_baseline}")
         return 0
 
+    if args.prune_baseline and not args.baseline:
+        raise AnalysisError("--prune-baseline requires --baseline")
     baseline = load_baseline(args.baseline) if args.baseline else []
     new = report.new_errors(baseline)
+    # stale entries: baselined identities that no longer occur (not even
+    # suppressed) — silently accepting them would let the baseline mask a
+    # future regression under the same code@location
+    current = {d.key for d in report.errors} \
+        | {d.key for d in report.suppressed if d.severity == "error"}
+    stale = sorted(k for k in baseline if k not in current)
+    if stale and args.prune_baseline:
+        kept = sorted(k for k in baseline if k in current)
+        Path(args.baseline).write_text(
+            json.dumps({"version": BASELINE_VERSION, "errors": kept},
+                       indent=2, sort_keys=True) + "\n")
     if args.json:
         payload = report.to_json_dict()
         payload["new_errors"] = sorted(d.key for d in new)
+        if args.baseline:
+            payload["stale_baseline"] = stale
+            payload["pruned_baseline"] = bool(stale and args.prune_baseline)
         print(json.dumps(payload, indent=2, sort_keys=True))
     else:
         print(report.render())
         if args.baseline:
             print(f"{len(new)} new error(s) vs baseline {args.baseline}")
+            for key in stale:
+                print(f"warning: baseline entry {key} no longer occurs"
+                      + (" (pruned)" if args.prune_baseline else
+                         " — prune with --prune-baseline"))
     return 1 if new else 0
 
 

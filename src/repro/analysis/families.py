@@ -54,28 +54,45 @@ from repro.core.uipick import Generator, KernelFamily, _SkipVariant
 _REL_TOL = 1e-9
 
 
-def _first_family(gen: Generator
-                  ) -> Tuple[Optional[KernelFamily], Dict[str, Any]]:
-    """The generator's family at its FIRST buildable fixed-argument combo
-    (argument-space order), plus that combo's fixed (non-size) arguments.
-    One representative per generator: the kernel body is the same callable
-    for every fixed combo, so a degree lie shows up at any of them;
-    per-combo probe geometry differences are carried by the family
-    itself."""
+def iter_families(gen: Generator, *, all_combos: bool = False):
+    """Yield ``(family, fixed)`` per distinct buildable fixed-argument
+    combination (argument-space order).  By default only the FIRST one —
+    a single representative per generator, historically enough because
+    the kernel body is the same callable for every fixed combo.  With
+    ``all_combos`` the sweep covers EVERY distinct fixed combination:
+    per-combo probe geometry (tile shapes, access patterns) can change
+    which features exist and at what degree, and a degree lie confined
+    to a non-first combo is invisible to the representative audit."""
     if gen.family is None:
-        return None, {}
+        return
     names = sorted(gen.arg_space)
+    seen: set = set()
     for combo in itertools.product(*(gen.arg_space[n] for n in names)):
         kw = dict(zip(names, combo))
+        fixed = {a: v for a, v in kw.items()
+                 if a not in gen.family.var_degrees}
+        key = tuple(sorted(fixed.items()))
+        if key in seen:
+            continue
         try:
             gen.build(**kw)     # builders raise _SkipVariant eagerly
         except _SkipVariant:
             continue
         fam = gen._family_of(kw)
-        if fam is not None:
-            fixed = {a: v for a, v in kw.items()
-                     if a not in gen.family.var_degrees}
-            return fam, fixed
+        if fam is None:
+            continue
+        seen.add(key)
+        yield fam, fixed
+        if not all_combos:
+            return
+
+
+def _first_family(gen: Generator
+                  ) -> Tuple[Optional[KernelFamily], Dict[str, Any]]:
+    """The generator's family at its first buildable fixed-argument
+    combo, plus that combo's fixed (non-size) arguments."""
+    for fam, fixed in iter_families(gen):
+        return fam, fixed
     return None, {}
 
 
@@ -91,14 +108,30 @@ def _is_zero(d: np.ndarray, magnitude: float) -> bool:
 
 
 def validate_family(gen: Generator,
-                    *, stats: Optional[Dict[str, int]] = None
-                    ) -> List[Diagnostic]:
+                    *, stats: Optional[Dict[str, int]] = None,
+                    all_combos: bool = False) -> List[Diagnostic]:
     """Degree-check one generator's family declaration (abstract probes
-    only).  Emits nothing for generators without a ``FamilySpec``."""
+    only).  Emits nothing for generators without a ``FamilySpec``.
+    With ``all_combos`` every distinct fixed-argument combination is
+    audited (``repro.lint --all-combos``); findings repeated verbatim
+    across combos are reported once, for the first combo that surfaced
+    them — ``details["fixed"]`` names the audited combo as always."""
+    out: List[Diagnostic] = []
+    seen: set = set()
+    for fam, fixed in iter_families(gen, all_combos=all_combos):
+        for d in _validate_at(gen, fam, fixed, stats=stats):
+            key = (d.severity, d.code, d.location, d.message)
+            if key not in seen:
+                seen.add(key)
+                out.append(d)
+    return out
+
+
+def _validate_at(gen: Generator, fam: KernelFamily, fixed: Dict[str, Any],
+                 *, stats: Optional[Dict[str, int]] = None
+                 ) -> List[Diagnostic]:
+    """The degree check of one family member (one fixed-argument combo)."""
     loc = f"generator:{gen.name}"
-    fam, fixed = _first_family(gen)
-    if fam is None:
-        return []
     out: List[Diagnostic] = []
     base_sizes = {v: fam.base for v in fam.var_degrees}
     probed: Dict[tuple, FeatureCounts] = {}

@@ -10,8 +10,13 @@ visible up front:
 * ``unmodeled-primitive`` (error) — a primitive that performs real work
   but earns no feature (the accuracy-vs-scope gap, statically located);
 * ``opaque-primitive`` (error) — a primitive carrying a sub-computation
-  the walker never enters (``pallas_call``, callbacks, custom calls): its
-  entire body is invisible to the counter;
+  the walker never enters (callbacks, custom calls): its entire body is
+  invisible to the counter;
+* ``pallas-unanalyzable`` (error) — a ``pallas_call`` the static cost
+  analyzer (:mod:`repro.analysis.pallascost`) cannot open, with the
+  precise reason (dynamic grid, non-affine index map, scalar prefetch);
+  analyzable ``pallas_call``s are *entered* — their kernel bodies are
+  audited like any other jaxpr and their counts served statically;
 * ``while-trip-count`` (warning) — a ``while`` whose trip count is data
   dependent; the counter charges its body exactly once per visit;
 * ``mixed-precision`` (warning) — arithmetic in ≥ 2 distinct float dtypes
@@ -40,9 +45,10 @@ from repro.core.counting import (
 
 # primitives that wrap an inner computation the counting walker does NOT
 # recurse into — known-opaque by name; the generic sub-jaxpr sniff below
-# catches future ones
+# catches future ones.  pallas_call is NOT here: its static cost analyzer
+# either opens the body or names precisely why it cannot.
 _KNOWN_OPAQUE = frozenset({
-    "pallas_call", "custom_call", "pure_callback", "io_callback",
+    "custom_call", "pure_callback", "io_callback",
     "debug_callback", "custom_partitioning", "xla_call",
 })
 
@@ -89,10 +95,20 @@ class _ScopeWalk:
         self.whiles = 0
         self.data_dep: Counter = Counter()
         self.arith_dtypes: Set[str] = set()
+        # (reason, message) → occurrences, from unanalyzable pallas_calls
+        self.pallas_unanalyzable: Counter = Counter()
 
     def walk(self, jaxpr) -> None:
         for eqn in jaxpr.eqns:
             prim = eqn.primitive.name
+            if prim == "pallas_call":
+                from repro.analysis.pallascost import unanalyzable_reason
+                why = unanalyzable_reason(eqn)
+                if why is None:     # analyzable: audit the kernel body
+                    self.walk(eqn.params["jaxpr"])
+                else:
+                    self.pallas_unanalyzable[(why.reason, why.message)] += 1
+                continue
             cls = primitive_cost_class(prim)
             if cls == "control":
                 if prim == "while":
@@ -133,6 +149,14 @@ def audit_jaxpr(jaxpr, location: str) -> List[Diagnostic]:
             f"sub-computation the counter never enters — its entire body "
             f"is invisible to the cost model",
             details={"primitive": prim, "occurrences": w.opaque[prim]}))
+    for (reason, message) in sorted(w.pallas_unanalyzable):
+        n = w.pallas_unanalyzable[(reason, message)]
+        out.append(Diagnostic(
+            "error", "pallas-unanalyzable", location,
+            f"pallas_call ({n}×) defeats the static cost analyzer "
+            f"[{reason}]: {message} — its body's work is invisible to "
+            f"every model fitted on these counts",
+            details={"reason": reason, "occurrences": n}))
     if w.whiles:
         out.append(Diagnostic(
             "warning", "while-trip-count", location,

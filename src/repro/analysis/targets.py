@@ -8,10 +8,19 @@ mirror ``tests/test_kernels.py`` (one representative configuration per
 kernel); block sizes are bound statically via ``functools.partial`` the
 same way the tests call them.
 
-These audits are EXPECTED to report ``opaque-primitive`` for every
-Pallas kernel: ``pallas_call`` wraps its body jaxpr in a grid the
-counting walker does not enter, which is precisely the scope gap the
-linter exists to make visible (and the checked-in baseline acknowledges).
+These audits are EXPECTED to be clean: ``pallas_call`` is no longer
+opaque — the static cost analyzer (:mod:`repro.analysis.pallascost`)
+opens every wrapper here, audits the kernel-body jaxpr with the ordinary
+scope vocabulary, and serves grid-scaled counts plus block-spec HBM
+traffic to the counter.  The checked-in ``lint_baseline.json`` is
+therefore EMPTY; any error on these targets is a regression.  A
+``pallas_call`` the analyzer cannot open (dynamic grid, non-affine index
+map, scalar prefetch) surfaces as the precise ``pallas-unanalyzable``
+diagnostic instead of a blanket opacity error.
+
+The same names feed ``python -m repro.calibrate predict --kernel NAME``:
+each target predicts end-to-end from a saved profile with zero timings,
+its memory term attributed from the statically derived traffic.
 """
 from __future__ import annotations
 

@@ -56,7 +56,9 @@ from repro.core.uipick import KernelFamily, MeasurementKernel, \
 
 # bump when the persisted entry format changes; stale entries read as
 # misses (never trusted) exactly like the measurement cache's discipline
-COUNT_STORE_VERSION = 1
+# v2: pallas_call is opened by the static cost analyzer (grid-scaled body
+# counts + block-spec HBM traffic) — v1 entries counted it as zero
+COUNT_STORE_VERSION = 2
 
 # memo of source hashes keyed by code object — getsource costs file IO,
 # and serving loops sign the same callables over and over

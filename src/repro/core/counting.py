@@ -17,10 +17,19 @@ Counted feature classes (the TPU translation of the paper's features):
     lid-strides; on TPU the analogous cost driver is (sublane, lane)
     layout friendliness.
   * collective  — payload bytes by collective kind (psum, all_gather, ...)
-  * sync        — program launches, loop steps
+  * sync        — program launches, loop steps, pallas grid programs
+
+``pallas_call`` is opened, not skipped: a registered sub-jaxpr handler
+(:mod:`repro.analysis.pallascost`, imported lazily on first encounter)
+walks the kernel body per grid program, scales by the grid size, and adds
+block-spec HBM↔VMEM traffic (``f_mem_hbm_bytes_in``/``_out`` plus the
+battery-calibrated ``f_mem_contig_*`` element classes).  Other opaque
+wrappers can register the same way via
+:func:`register_subjaxpr_handler`.
 """
 from __future__ import annotations
 
+import importlib
 import itertools
 from collections import defaultdict
 from dataclasses import dataclass, field
@@ -73,6 +82,7 @@ _ARITH = {
     "cos": "transc", "pow": "transc", "square": "mul",
     "exp2": "transc", "log1p": "transc", "expm1": "transc",
     "cumsum": "add", "cumlogsumexp": "transc", "cummax": "cmp",
+    "abs": "add",
 }
 
 _MEM_GATHER = {"gather", "take", "dynamic_slice"}
@@ -84,6 +94,11 @@ _MEM_CONCAT = {"concatenate"}
 _MEM_CONTIG = {"broadcast_in_dim", "pad", "slice", "squeeze",
                "expand_dims", "copy", "convert_element_type", "reshape",
                "iota", "select_n"}
+
+# stateful ref accesses (Pallas kernel bodies, run_state): element traffic
+# against the ref's memory space — the pallas analyzer reclassifies these
+# per ref (VMEM block vs ANY/HBM operand)
+_MEM_REF = {"get", "swap", "addupdate"}
 
 _COLLECTIVES = {"psum", "all_gather", "reduce_scatter", "all_to_all",
                 "ppermute", "pmax", "pmin", "psum_invariant",
@@ -131,10 +146,51 @@ ZERO_COST_PRIMITIVES = frozenset({
     # trace-time metadata
     "stop_gradient", "device_put", "create_token", "optimization_barrier",
     "reduce_precision", "sharding_constraint", "split",
+    # grid-coordinate reads inside pallas kernel bodies
+    "program_id", "num_programs",
 })
 
 # primitives with bespoke counting rules in _count_eqn (not table-driven)
 _SPECIAL = frozenset({"dot_general", "integer_pow", "sort"})
+
+
+# ---------------------------------------------------------------------------
+# Registered sub-jaxpr handlers — opaque-by-name primitives opened up by
+# analysis passes (pallas_call's static cost analyzer registers here)
+# ---------------------------------------------------------------------------
+
+#: prim name → handler(eqn, counts, mult); the handler owns the whole
+#: equation (recursing into whatever sub-jaxprs its params carry)
+_SUBJAXPR_HANDLERS: Dict[str, Callable[[Any, "FeatureCounts", float],
+                                       None]] = {}
+
+#: prim name → module whose import registers that prim's handler; popped
+#: on first use so a failed/absent registration is attempted only once
+_LAZY_HANDLER_MODULES: Dict[str, str] = {
+    "pallas_call": "repro.analysis.pallascost",
+}
+
+
+def register_subjaxpr_handler(
+        prim: str,
+        handler: Callable[[Any, "FeatureCounts", float], None]) -> None:
+    """Register a counting handler for a primitive that wraps a
+    sub-computation the table-driven walker cannot enter (``pallas_call``
+    and friends).  The handler is called as ``handler(eqn, counts, mult)``
+    and must fold the equation's whole cost into ``counts``."""
+    _SUBJAXPR_HANDLERS[prim] = handler
+
+
+def _handler_for(prim: str) -> Optional[Callable]:
+    handler = _SUBJAXPR_HANDLERS.get(prim)
+    if handler is None and prim in _LAZY_HANDLER_MODULES:
+        mod = _LAZY_HANDLER_MODULES.pop(prim)
+        try:
+            importlib.import_module(mod)    # registers on import
+        except ImportError:
+            return None
+        handler = _SUBJAXPR_HANDLERS.get(prim)
+    return handler
 
 
 def primitive_cost_class(prim: str) -> Optional[str]:
@@ -148,7 +204,8 @@ def primitive_cost_class(prim: str) -> Optional[str]:
     if prim in _REDUCE:
         return "reduce"
     if prim in _MEM_GATHER or prim in _MEM_SCATTER or prim in _MEM_STRIDED \
-            or prim in _MEM_CONCAT or prim in _MEM_CONTIG:
+            or prim in _MEM_CONCAT or prim in _MEM_CONTIG \
+            or prim in _MEM_REF:
         return "memory"
     if prim in _COLLECTIVES:
         return "collective"
@@ -158,11 +215,22 @@ def primitive_cost_class(prim: str) -> Optional[str]:
         return "control"
     if prim in ZERO_COST_PRIMITIVES:
         return "zero"
+    if _handler_for(prim) is not None:
+        return "control"        # a registered handler enters its body
     return None
 
 
-def _count_eqn(eqn, counts: FeatureCounts, mult: float):
+def _count_eqn(eqn, counts: FeatureCounts, mult: float,
+               override: Optional[Callable] = None):
     prim = eqn.primitive.name
+    # an analysis pass walking a sub-jaxpr may claim individual equations
+    # (e.g. ref accesses against ANY-space operands) before any table rule
+    if override is not None and override(eqn, counts, mult):
+        return
+    handler = _handler_for(prim)
+    if handler is not None:
+        handler(eqn, counts, mult)
+        return
     out_aval = eqn.outvars[0].aval if eqn.outvars else None
 
     if prim == "dot_general":
@@ -231,6 +299,21 @@ def _count_eqn(eqn, counts: FeatureCounts, mult: float):
         counts.add(f"f_mem_contig_{_dt(out_aval)}_store",
                    _size(out_aval) * mult)
         return
+    if prim in _MEM_REF:
+        # ref element traffic; the pallas analyzer renames these per the
+        # ref's memory space (VMEM block vs ANY/HBM operand)
+        if prim == "get":
+            counts.add(f"f_mem_ref_{_dt(out_aval)}_load",
+                       _size(out_aval) * mult)
+        elif prim == "swap":
+            counts.add(f"f_mem_ref_{_dt(out_aval)}_store",
+                       _size(out_aval) * mult)
+        else:               # addupdate: read-modify-write + the adds
+            upd = eqn.invars[1].aval
+            counts.add(f"f_mem_ref_{_dt(upd)}_load", _size(upd) * mult)
+            counts.add(f"f_mem_ref_{_dt(upd)}_store", _size(upd) * mult)
+            counts.add(f"f_op_{_dt(upd)}_add", _size(upd) * mult)
+        return
 
     if prim in _COLLECTIVES:
         nbytes = sum(_size(v.aval) * v.aval.dtype.itemsize
@@ -251,20 +334,24 @@ def _count_eqn(eqn, counts: FeatureCounts, mult: float):
     # key-by-key — nesting depth costs stack frames only, never dict churn
     if prim == "scan":
         length = eqn.params["length"]
-        _count_jaxpr_into(eqn.params["jaxpr"].jaxpr, counts, length * mult)
+        _count_jaxpr_into(eqn.params["jaxpr"].jaxpr, counts, length * mult,
+                          override=override)
         counts.add("f_sync_loop_steps", length * mult)
         return
     if prim == "while":
         # unknown trip count: charge body AND predicate once per visit (the
         # predicate runs trips+1 times; single-visit accounting charges 1)
-        _count_jaxpr_into(eqn.params["body_jaxpr"].jaxpr, counts, mult)
-        _count_jaxpr_into(eqn.params["cond_jaxpr"].jaxpr, counts, mult)
+        _count_jaxpr_into(eqn.params["body_jaxpr"].jaxpr, counts, mult,
+                          override=override)
+        _count_jaxpr_into(eqn.params["cond_jaxpr"].jaxpr, counts, mult,
+                          override=override)
         counts.add("f_sync_loop_steps", mult)
         return
     if prim == "cond":
         branches = eqn.params["branches"]
         for br in branches:  # average — divergent-branch accounting (§4)
-            _count_jaxpr_into(br.jaxpr, counts, mult / len(branches))
+            _count_jaxpr_into(br.jaxpr, counts, mult / len(branches),
+                              override=override)
         return
     if prim in ("pjit", "closed_call", "core_call", "remat", "checkpoint",
                 "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
@@ -272,14 +359,15 @@ def _count_eqn(eqn, counts: FeatureCounts, mult: float):
         sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
         if sub is not None:
             jx = sub.jaxpr if hasattr(sub, "jaxpr") else sub
-            _count_jaxpr_into(jx, counts, mult)
+            _count_jaxpr_into(jx, counts, mult, override=override)
         return
     # everything else: ignore (shape ops, rng, etc.)
 
 
-def _count_jaxpr_into(jaxpr, counts: FeatureCounts, mult: float) -> None:
+def _count_jaxpr_into(jaxpr, counts: FeatureCounts, mult: float,
+                      override: Optional[Callable] = None) -> None:
     for eqn in jaxpr.eqns:
-        _count_eqn(eqn, counts, mult)
+        _count_eqn(eqn, counts, mult, override=override)
 
 
 def count_jaxpr_counts(jaxpr) -> FeatureCounts:

@@ -50,7 +50,10 @@ from repro.core.uipick import TimingStats
 # square-and-multiply muls + a div for negative exponents; `square`
 # counts a mul) — entries persisted under the old rule would silently mix
 # two cost models into one feature table
-CACHE_SCHEMA_VERSION = 3
+# v4: pallas_call is opened by the static cost analyzer (grid-scaled
+# body counts, `abs`, ref traffic, HBM byte features) — cached counts
+# from v3 never saw inside a pallas kernel
+CACHE_SCHEMA_VERSION = 4
 
 # files the cache owns: entries are always named by a 64-hex SHA-256
 # digest — anything else in the directory is not ours to count or delete

@@ -256,8 +256,14 @@ def _cmd_predict(argv: List[str]) -> int:
                     "measurement cache), and the whole batch is evaluated "
                     "in ONE jit-compiled call — no kernel is ever timed.")
     ap.add_argument("profile", help="machine-profile JSON path")
-    ap.add_argument("--tags", nargs="+", required=True,
+    ap.add_argument("--tags", nargs="+", default=None,
                     help="UIPiCK filter tags selecting kernels to predict")
+    ap.add_argument("--kernel", action="append", default=[],
+                    metavar="NAME",
+                    help="built-in Pallas kernel target to predict "
+                         "(repeatable; e.g. kernels.ops.matmul — see "
+                         "repro.analysis.targets), costed statically "
+                         "from grid/block specs, never executed")
     ap.add_argument("--match", choices=sorted(_MATCH), default="intersect",
                     help="generator tag match condition")
     ap.add_argument("--model", default=None,
@@ -290,18 +296,40 @@ def _cmd_predict(argv: List[str]) -> int:
     except ProfileError as e:
         print(f"[predict] {e}", file=sys.stderr)
         return 3
-    kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
-        args.tags, generator_match_cond=_MATCH[args.match])
-    if not kernels:
-        print(f"[predict] no measurement kernels match tags "
-              f"{args.tags!r}", file=sys.stderr)
+    items: List = []
+    names: List[str] = []
+    if args.tags:
+        kernels = KernelCollection(ALL_GENERATORS).generate_kernels(
+            args.tags, generator_match_cond=_MATCH[args.match])
+        if not kernels:
+            print(f"[predict] no measurement kernels match tags "
+                  f"{args.tags!r}", file=sys.stderr)
+            return 2
+        items.extend(kernels)
+        names.extend(k.name for k in kernels)
+    if args.kernel:
+        from repro.analysis.targets import kernel_targets
+        targets = {t.name: t for t in kernel_targets()}
+        for name in args.kernel:
+            t = targets.get(name)
+            if t is None:
+                print(f"[predict] unknown --kernel {name!r}; built-in "
+                      f"targets: {', '.join(sorted(targets))}",
+                      file=sys.stderr)
+                return 2
+            items.append((t.fn, t.args))
+            names.append(t.name)
+    if not items:
+        print("[predict] nothing to predict: pass --tags and/or --kernel",
+              file=sys.stderr)
         return 2
     if args.audit:
-        report = session.audit(kernels, model=args.model)
+        report = session.audit(items, model=args.model)
         for line in report.render().splitlines():
             print(f"[audit] {line}")
     try:
-        preds = session.predict_batch(kernels, model=args.model,
+        preds = session.predict_batch(items, model=args.model,
+                                      names=names,
                                       strict=args.strict_scope)
     except PredictionError as e:
         print(f"[predict] {e}", file=sys.stderr)

@@ -164,15 +164,75 @@ def test_default_scope_is_clean_and_execution_free(capsys):
     assert "probe-lattice-divisibility" in codes
 
 
-def test_kernel_wrappers_match_committed_baseline(capsys):
-    """The Pallas wrappers are opaque to the counter by design; the
-    checked-in CI baseline pins exactly that finding set."""
+def test_kernel_wrappers_lint_clean_against_empty_baseline(capsys):
+    """The static cost analyzer opens every Pallas wrapper: the
+    checked-in CI baseline is EMPTY, and the wrappers must pass against
+    it with zero errors — no ``opaque-primitive``, no
+    ``pallas-unanalyzable``."""
+    committed = json.loads((REPO / "lint_baseline.json").read_text())
+    assert committed["errors"] == []
     code, payload = _run_json(
         capsys, ["--kernels", "--no-default", "--json",
                  "--baseline", str(REPO / "lint_baseline.json")])
     assert code == 0 and payload["new_errors"] == []
+    assert payload["counts"]["error"] == 0
     codes = {d["code"] for d in payload["diagnostics"]}
-    assert codes == {"opaque-primitive"}
+    assert "opaque-primitive" not in codes
+    assert "pallas-unanalyzable" not in codes
+    assert payload["stats"]["timings"] == 0
+
+
+def test_stale_baseline_entries_warn_and_prune(capsys, tmp_path,
+                                               fixture_module):
+    """A baseline entry whose finding no longer occurs is reported as
+    stale; ``--prune-baseline`` rewrites the file without it."""
+    baseline = tmp_path / "baseline.json"
+    assert main(["--no-default", fixture_module,
+                 "--write-baseline", str(baseline)]) == 0
+    capsys.readouterr()
+    ghost = "unmodeled-primitive@kernel:deleted_kernel"
+    payload = json.loads(baseline.read_text())
+    payload["errors"].append(ghost)
+    baseline.write_text(json.dumps(payload))
+
+    code, out = _run_json(
+        capsys, ["--no-default", "--json", fixture_module,
+                 "--baseline", str(baseline)])
+    assert code == 0                        # stale entries never fail a run
+    assert out["stale_baseline"] == [ghost]
+    assert out["pruned_baseline"] is False
+    assert ghost in json.loads(baseline.read_text())["errors"]
+
+    code, out = _run_json(
+        capsys, ["--no-default", "--json", fixture_module,
+                 "--baseline", str(baseline), "--prune-baseline"])
+    assert code == 0
+    assert out["stale_baseline"] == [ghost]
+    assert out["pruned_baseline"] is True
+    kept = json.loads(baseline.read_text())
+    assert ghost not in kept["errors"] and kept["errors"]
+    # a second run against the pruned file sees nothing stale
+    code, out = _run_json(
+        capsys, ["--no-default", "--json", fixture_module,
+                 "--baseline", str(baseline)])
+    assert code == 0 and out["stale_baseline"] == []
+
+
+def test_prune_baseline_requires_baseline(capsys):
+    assert main(["--no-default", "--kernels", "--prune-baseline"]) == 2
+    assert "--baseline" in capsys.readouterr().err
+
+
+def test_all_combos_sweeps_beyond_first_fixed_combo(capsys):
+    """``--all-combos`` audits every buildable fixed-argument combination
+    of the default generators: still clean, still execution-free, and
+    strictly more abstract traces than the representative sweep."""
+    _code, first = _run_json(capsys, ["--json"])
+    code, swept = _run_json(capsys, ["--json", "--all-combos"])
+    assert code == 0
+    assert swept["counts"]["error"] == 0
+    assert swept["stats"]["timings"] == 0
+    assert swept["stats"]["traces"] > first["stats"]["traces"]
 
 
 def test_example_module_lints_clean(capsys):
