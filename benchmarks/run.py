@@ -18,6 +18,8 @@ Benches (one per paper table/figure):
           cold vs solver-cache-warm, closed-loop recovery error
   predict serving surface — PerfSession single vs batched prediction
           throughput (one jit-compiled evaluation per batch)
+  serve   serving daemon — p50/p99 request latency, serial loop vs
+          coalesced concurrent burst (requests per compiled evaluation)
   counting amortized symbolic counts — count-matrix construction via
           symbolic kernel families vs per-size tracing; predict_batch
           dedup vs no-dedup
@@ -32,12 +34,14 @@ def main() -> None:
     from benchmarks.counting_bench import counting_rows
     from benchmarks.predict_bench import predict_rows
     from benchmarks.roofline_bench import roofline_rows
+    from benchmarks.serve_bench import serve_rows
     from benchmarks.study_bench import study_rows
 
     benches = {
         "calibration": calibration_rows,
         "study": study_rows,
         "predict": predict_rows,
+        "serve": serve_rows,
         "counting": counting_rows,
         "fig1": pf.fig1_matmul_simple,
         "fig2": pf.fig2_madd_component,

@@ -1,0 +1,93 @@
+"""Serving-daemon benchmark: coalesced concurrent bursts vs serial
+``predict`` loops.
+
+The daemon's claim is that concurrency *creates* the batch: K in-flight
+requests park on the :class:`CoalescingBatcher` and drain as one
+``batched_breakdown`` evaluation, so a burst's wall time scales with the
+(single) compiled evaluation, not with K Python dispatches.  This bench
+pins service latency as numbers — p50/p99 per-request latency for the
+serial loop and for the coalesced concurrent burst, the burst's
+throughput win, and the compiled-evaluation count that explains it.
+
+Rows follow the suite convention ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import List
+
+from benchmarks.predict_bench import _kernels, _profile
+from repro.api import PerfSession
+from repro.serving import CoalescingBatcher
+
+N_UNIQUE = 8
+BURST = 64
+ROUNDS = 5
+
+
+def _pct(samples: List[float], q: float) -> float:
+    ordered = sorted(samples)
+    return ordered[min(len(ordered) - 1, int(q * len(ordered)))]
+
+
+def serve_rows() -> List[str]:
+    session = PerfSession.open(_profile())
+    unique = _kernels(N_UNIQUE)
+    for k in unique:
+        k.counts()                      # memoize counting out of the loop
+    requests = [unique[i % N_UNIQUE] for i in range(BURST)]
+    session.predict_batch(requests)     # warm the [N, F] evaluator
+    session.predict(unique[0])          # ... and the [1, F] one
+
+    # serial baseline: one predict (one compiled eval) per request
+    serial: List[float] = []
+    t0 = time.perf_counter()
+    for _ in range(ROUNDS):
+        for k in requests:
+            t = time.perf_counter()
+            session.predict(k)
+            serial.append(time.perf_counter() - t)
+    serial_wall = (time.perf_counter() - t0) / (ROUNDS * BURST)
+
+    # coalesced burst: BURST concurrent callers share one evaluation.
+    # hold/release makes every drain a full burst — otherwise ragged
+    # drain sizes retrace the [N, F] evaluator per novel batch shape
+    batcher = CoalescingBatcher(session, max_wait_s=0.002)
+    coalesced: List[float] = []
+
+    def one_request(k) -> float:
+        t = time.perf_counter()
+        batcher.predict(k, timeout=60.0)
+        return time.perf_counter() - t
+
+    def burst_round(pool, record) -> None:
+        batcher.hold()
+        futs = [pool.submit(one_request, k) for k in requests]
+        while batcher.pending_count() < BURST:
+            time.sleep(0.0002)
+        batcher.release()
+        results = [f.result(timeout=60.0) for f in futs]
+        if record is not None:
+            record.extend(results)
+
+    with ThreadPoolExecutor(max_workers=BURST) as pool:
+        burst_round(pool, None)         # warm the [BURST, F] trace
+        evals0 = session.eval_calls
+        t0 = time.perf_counter()
+        for _ in range(ROUNDS):
+            burst_round(pool, coalesced)
+        burst_wall = (time.perf_counter() - t0) / (ROUNDS * BURST)
+    evals = session.eval_calls - evals0
+    batcher.close()
+
+    return [
+        f"serve.serial_p50_us,{_pct(serial, 0.50) * 1e6:.2f},",
+        f"serve.serial_p99_us,{_pct(serial, 0.99) * 1e6:.2f},",
+        f"serve.coalesced_p50_us,{_pct(coalesced, 0.50) * 1e6:.2f},",
+        f"serve.coalesced_p99_us,{_pct(coalesced, 0.99) * 1e6:.2f},",
+        f"serve.burst_us_per_request,{burst_wall * 1e6:.2f},"
+        f"{serial_wall / burst_wall:.1f}x",
+        f"serve.burst_evals,{evals},"
+        f"{ROUNDS * BURST / max(evals, 1):.0f}_reqs_per_eval",
+    ]

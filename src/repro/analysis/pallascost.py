@@ -8,11 +8,21 @@ block each program's window DMAs into VMEM).  This module turns that into
 :class:`repro.core.counting.FeatureCounts`:
 
 * **body counts** — the body jaxpr is walked with the ordinary counting
-  vocabulary (``cond`` branches averaged, ``scan`` bodies multiplied)
-  and scaled by the grid size.  Body-local memory features are renamed
-  ``f_mem_*`` → ``f_vmem_*``: a ``slice`` of a VMEM-resident block is
-  on-chip traffic, a different cost class from the HBM streams the
-  calibration batteries measure.
+  vocabulary (``scan`` bodies multiplied by trip count) and scaled by the
+  grid size.  Body-local memory features are renamed ``f_mem_*`` →
+  ``f_vmem_*``: a ``slice`` of a VMEM-resident block is on-chip traffic,
+  a different cost class from the HBM streams the calibration batteries
+  measure.
+* **exact grid-edge branches** — ``pl.when``/``cond`` whose predicate is
+  a quasi-affine function of ``program_id`` (the ``k == 0`` init /
+  ``k == n_k - 1`` flush idiom of every pipelined kernel) is resolved
+  *per grid program*: each branch is charged exactly the fraction of
+  programs that execute it (nested ``when``s condition on the enclosing
+  branch's program set).  Only when the predicate is unresolvable — data
+  dependent, or the grid exceeds the exact-enumeration limit — does the
+  analyzer fall back to averaging across branches, and then it says so in
+  :attr:`PallasCost.notes` (surfaced by :mod:`repro.analysis.scope` as
+  the info-severity ``pallas-averaged-branch`` diagnostic).
 * **HBM↔VMEM traffic** — for each blocked operand, the index map is
   evaluated (pure numpy, on abstract grid indices) over every grid point
   in lexicographic order; a block is (re)fetched exactly when its index
@@ -101,12 +111,16 @@ class OperandTraffic:
 @dataclass(frozen=True)
 class PallasCost:
     """One ``pallas_call``'s static cost: total feature counts (body ×
-    grid + block traffic) plus the per-operand traffic table."""
+    grid + block traffic) plus the per-operand traffic table.  ``notes``
+    records every analysis imprecision that did NOT make the call
+    unanalyzable — today, ``cond`` branches whose predicate could not be
+    resolved per grid program and were averaged instead."""
 
     grid: Tuple[int, ...]
     num_programs: int
     counts: FeatureCounts
     traffic: Tuple[OperandTraffic, ...]
+    notes: Tuple[str, ...] = ()
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +161,15 @@ def _read(env: Dict[Any, _Val], v) -> _Val:
     if hasattr(v, "val"):           # jax literal
         return _Val(np.asarray(v.val), False)
     return env[v]
+
+
+def _maybe_val(env: Dict[Any, _Val], v) -> Optional[_Val]:
+    """Like :func:`_read` but ``None`` for a variable the interpreter has
+    not resolved — the body-walk scalar tracker's partial-knowledge
+    read (an index map, by contrast, must resolve everything)."""
+    if hasattr(v, "val"):
+        return _Val(np.asarray(v.val), False)
+    return env.get(v)
 
 
 def _binop(fn, a: _Val, b: _Val) -> _Val:
@@ -359,34 +382,124 @@ def analyze_pallas_call(eqn) -> PallasCost:
     operand_refs = body.invars[:n_in + n_out]
     any_refs = {id(v) for v in operand_refs if _is_any_space(v.aval)}
 
-    # ---- body walk: ANY-ref accesses become HBM traffic, the rest is
-    # ordinary counting with memory features downgraded to VMEM class
-    hbm = FeatureCounts()
+    # grid enumeration is shared by the body walk (per-program branch
+    # resolution) and the block-traffic pass below
+    axes, exact = _grid_axes(grid)
+    n_points = axes[0].shape[0] if axes else 1
 
-    def override(sub_eqn, _counts, mult) -> bool:
+    # ---- body walk: ANY-ref accesses become HBM traffic, cond branches
+    # with program_id-derived predicates are charged per grid program, and
+    # the rest is ordinary counting with memory features downgraded to
+    # VMEM class
+    hbm = FeatureCounts()
+    notes: List[str] = []
+    # scalar dataflow over the grid: var → value at every grid point.
+    # program_id seeds it; ordinary scalar arithmetic extends it through
+    # the same quasi-affine interpreter the index maps use.
+    env: Dict[Any, _Val] = {}
+    # the set of grid programs executing the current branch-nesting level:
+    # a nested `when` conditions its branch fractions on the enclosing
+    # branch's programs, so joint (not just marginal) weights are exact
+    mask_stack: List[np.ndarray] = [np.ones(n_points, dtype=bool)]
+
+    def _bind(jx, consts, outer_invars) -> None:
+        """Carry known scalar values across a sub-jaxpr boundary."""
+        for var, c in zip(jx.constvars, consts):
+            if getattr(c, "shape", None) == ():
+                env[var] = _Val(np.asarray(c), False)
+        for var, outer in zip(jx.invars, outer_invars):
+            val = _maybe_val(env, outer)
+            if val is not None:
+                env[var] = val
+
+    def override(sub_eqn, counts_acc, mult) -> bool:
         prim = sub_eqn.primitive.name
-        if prim not in ("get", "swap", "addupdate"):
+        if prim in ("get", "swap", "addupdate"):
+            if id(sub_eqn.invars[0]) not in any_refs \
+                    and not _is_any_space(sub_eqn.invars[0].aval):
+                return False
+            ref_dt = _dt(sub_eqn.invars[0].aval)
+            nbytes = np.dtype(ref_dt).itemsize
+            if prim == "get":
+                elems = _size(sub_eqn.outvars[0].aval)
+                hbm.add(f"f_mem_contig_{ref_dt}_load", elems * mult)
+                hbm.add(BYTES_IN_FEATURE, elems * nbytes * mult)
+            elif prim == "swap":
+                elems = _size(sub_eqn.outvars[0].aval)
+                hbm.add(f"f_mem_contig_{ref_dt}_store", elems * mult)
+                hbm.add(BYTES_OUT_FEATURE, elems * nbytes * mult)
+            else:           # addupdate: read-modify-write
+                elems = _size(sub_eqn.invars[1].aval)
+                hbm.add(f"f_mem_contig_{ref_dt}_load", elems * mult)
+                hbm.add(f"f_mem_contig_{ref_dt}_store", elems * mult)
+                hbm.add(BYTES_IN_FEATURE, elems * nbytes * mult)
+                hbm.add(BYTES_OUT_FEATURE, elems * nbytes * mult)
+            return True
+        if prim == "program_id":
+            if exact and axes:
+                env[sub_eqn.outvars[0]] = _Val(
+                    axes[sub_eqn.params["axis"]], True)
+            return False        # stays zero-cost; counted normally
+        if prim == "num_programs":
+            ax = sub_eqn.params["axis"]
+            env[sub_eqn.outvars[0]] = _Val(
+                np.asarray(grid[ax], np.int64), False)
             return False
-        if id(sub_eqn.invars[0]) not in any_refs \
-                and not _is_any_space(sub_eqn.invars[0].aval):
-            return False
-        ref_dt = _dt(sub_eqn.invars[0].aval)
-        nbytes = np.dtype(ref_dt).itemsize
-        if prim == "get":
-            elems = _size(sub_eqn.outvars[0].aval)
-            hbm.add(f"f_mem_contig_{ref_dt}_load", elems * mult)
-            hbm.add(BYTES_IN_FEATURE, elems * nbytes * mult)
-        elif prim == "swap":
-            elems = _size(sub_eqn.outvars[0].aval)
-            hbm.add(f"f_mem_contig_{ref_dt}_store", elems * mult)
-            hbm.add(BYTES_OUT_FEATURE, elems * nbytes * mult)
-        else:               # addupdate: read-modify-write
-            elems = _size(sub_eqn.invars[1].aval)
-            hbm.add(f"f_mem_contig_{ref_dt}_load", elems * mult)
-            hbm.add(f"f_mem_contig_{ref_dt}_store", elems * mult)
-            hbm.add(BYTES_IN_FEATURE, elems * nbytes * mult)
-            hbm.add(BYTES_OUT_FEATURE, elems * nbytes * mult)
-        return True
+        if prim == "cond":
+            branches = sub_eqn.params["branches"]
+            if not exact:
+                notes.append(
+                    f"grid {grid} exceeds the exact-enumeration limit "
+                    f"({_ENUM_LIMIT} programs): cond branch costs are "
+                    f"averaged across {len(branches)} branches")
+                return False    # default averaging in _count_eqn
+            idx_val = _maybe_val(env, sub_eqn.invars[0])
+            if idx_val is None:
+                notes.append(
+                    f"cond predicate is not a resolvable function of "
+                    f"program_id: branch costs are averaged across "
+                    f"{len(branches)} branches")
+                return False
+            sel = np.broadcast_to(
+                np.clip(np.asarray(idx_val.arr).astype(np.int64),
+                        0, len(branches) - 1), (n_points,))
+            mask = mask_stack[-1]
+            live = int(mask.sum())
+            for b, br in enumerate(branches):
+                jx = br.jaxpr
+                _bind(jx, br.consts, sub_eqn.invars[1:])
+                bmask = mask & (sel == b)
+                took = int(bmask.sum())
+                if took == 0:
+                    continue    # no program takes this branch: zero cost
+                mask_stack.append(bmask)
+                try:
+                    _count_jaxpr_into(jx, counts_acc,
+                                      mult * (took / live),
+                                      override=override)
+                finally:
+                    mask_stack.pop()
+            return True
+        if prim in ("pjit", "closed_call", "core_call", "remat",
+                    "checkpoint", "custom_jvp_call", "custom_vjp_call",
+                    "custom_vjp_call_jaxpr"):
+            sub = sub_eqn.params.get("jaxpr") \
+                or sub_eqn.params.get("call_jaxpr")
+            if sub is not None:
+                jx = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                _bind(jx, getattr(sub, "consts", ()), sub_eqn.invars)
+            return False        # normal counting recurses with override
+        # ordinary scalar equation: extend the dataflow when every operand
+        # is known (best effort — unresolved vars just stop the chain)
+        if len(sub_eqn.outvars) == 1 \
+                and getattr(sub_eqn.outvars[0].aval, "shape", None) == () \
+                and all(_maybe_val(env, v) is not None
+                        for v in sub_eqn.invars):
+            try:
+                _interp_eqn(sub_eqn, env)
+            except _NonAffine:
+                pass
+        return False
 
     body_counts = FeatureCounts()
     _count_jaxpr_into(body, body_counts, 1.0, override=override)
@@ -398,7 +511,6 @@ def analyze_pallas_call(eqn) -> PallasCost:
         total.add(k, v * num_programs)
 
     # ---- block-spec HBM traffic: fetches = index-map runs over the grid
-    axes, exact = _grid_axes(grid)
     traffic: List[OperandTraffic] = []
     mappings = list(gm.block_mappings)
     for pos, bm in enumerate(mappings):
@@ -427,7 +539,8 @@ def analyze_pallas_call(eqn) -> PallasCost:
 
     total.add("f_sync_grid_programs", num_programs)
     return PallasCost(grid=grid, num_programs=num_programs,
-                      counts=total, traffic=tuple(traffic))
+                      counts=total, traffic=tuple(traffic),
+                      notes=tuple(dict.fromkeys(notes)))
 
 
 def unanalyzable_reason(eqn) -> Optional[PallasUnanalyzable]:

@@ -24,7 +24,12 @@ visible up front:
   with a single-dtype battery cannot attribute the second dtype's cost;
 * ``data-dependent-access`` (info) — gather/scatter/dynamic-slice whose
   indices are runtime values: counted by element traffic, but locality
-  (the actual cost driver) is invisible to shape-only analysis.
+  (the actual cost driver) is invisible to shape-only analysis;
+* ``pallas-averaged-branch`` (info) — an analyzable ``pallas_call``
+  containing a ``cond``/``pl.when`` whose predicate the cost analyzer
+  could not resolve per grid program (data dependent, or the grid exceeds
+  exact enumeration): its branch costs are averaged rather than charged
+  to the programs that actually execute them.
 
 Everything here runs on abstract values only — ``jax.make_jaxpr`` over
 ``ShapeDtypeStruct`` inputs — so auditing never executes a kernel, never
@@ -97,17 +102,28 @@ class _ScopeWalk:
         self.arith_dtypes: Set[str] = set()
         # (reason, message) → occurrences, from unanalyzable pallas_calls
         self.pallas_unanalyzable: Counter = Counter()
+        # note → occurrences: analyzable pallas_calls whose cond branches
+        # fell back to averaging (predicate unresolvable from program_id)
+        self.pallas_notes: Counter = Counter()
 
     def walk(self, jaxpr) -> None:
         for eqn in jaxpr.eqns:
             prim = eqn.primitive.name
             if prim == "pallas_call":
-                from repro.analysis.pallascost import unanalyzable_reason
-                why = unanalyzable_reason(eqn)
-                if why is None:     # analyzable: audit the kernel body
-                    self.walk(eqn.params["jaxpr"])
-                else:
-                    self.pallas_unanalyzable[(why.reason, why.message)] += 1
+                from repro.analysis.pallascost import (
+                    PallasUnanalyzable,
+                    analyze_pallas_call,
+                )
+                try:
+                    cost = analyze_pallas_call(eqn)
+                except PallasUnanalyzable as why:
+                    self.pallas_unanalyzable[(why.reason,
+                                              why.message)] += 1
+                    continue
+                for note in cost.notes:
+                    self.pallas_notes[note] += 1
+                # analyzable: audit the kernel body like any other jaxpr
+                self.walk(eqn.params["jaxpr"])
                 continue
             cls = primitive_cost_class(prim)
             if cls == "control":
@@ -172,6 +188,14 @@ def audit_jaxpr(jaxpr, location: str) -> List[Diagnostic]:
             f"per-dtype features separate the counts, but a model "
             f"calibrated on a single-dtype battery has no rate for the "
             f"others", details={"dtypes": dts}))
+    for note in sorted(w.pallas_notes):
+        n = w.pallas_notes[note]
+        out.append(Diagnostic(
+            "info", "pallas-averaged-branch", location,
+            f"pallas_call ({n}×): {note} — grid-edge work (e.g. pl.when "
+            f"init/flush blocks) is charged to every program's average "
+            f"instead of the programs that execute it",
+            details={"note": note, "occurrences": n}))
     for prim in sorted(w.data_dep):
         out.append(Diagnostic(
             "info", "data-dependent-access", location,

@@ -3,14 +3,22 @@
 One object from kernel → counts → cross-machine prediction:
 
 * :class:`PerfSession` — open a machine profile (or calibrate on demand)
-  and predict any kernel's runtime on that machine, explained
+  and predict any kernel's runtime on that machine, explained.  The
+  stateful *resource* layer: caches, count engine, profile lifecycle.
+* :class:`PredictEngine` — the pure prediction core underneath
+  ((profile, counts) → :class:`Prediction`); owns no resources.
 * :class:`Prediction` — seconds + per-term cost breakdown + diagnostics
 * :class:`PredictionError` — every facade failure, typed and actionable
+  (strict-scope errors carry per-item ``violations``)
 
-This package is the serving surface the ROADMAP's north star builds on;
-the layers underneath (``repro.core``, ``repro.profiles``,
-``repro.studies``) stay importable but the facade is the supported API.
+Thread safety, by layer: :class:`PredictEngine` is fully thread-safe
+(lock-guarded memos, functional evaluation) and so is prediction through
+:class:`PerfSession` (the count engine serializes its cache internally);
+session *construction* — open/calibrate, which mutate resources — is
+single-threaded.  :mod:`repro.serving` builds the daemon on exactly this
+contract.
 """
+from repro.api.engine import PredictEngine
 from repro.api.errors import PredictionError, suggest_calibration_tags
 from repro.api.prediction import Prediction
 from repro.api.session import DEFAULT_MODEL, PerfSession
@@ -18,6 +26,7 @@ from repro.api.session import DEFAULT_MODEL, PerfSession
 __all__ = [
     "DEFAULT_MODEL",
     "PerfSession",
+    "PredictEngine",
     "Prediction",
     "PredictionError",
     "suggest_calibration_tags",

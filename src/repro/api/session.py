@@ -19,25 +19,33 @@ cache), and every batch is evaluated in a single jit-compiled
 ``batched_breakdown`` call, so throughput scales with batch size, not
 Python dispatch.  ``eval_calls``/``trace_count`` make that claim
 observable — tests assert exactly one compiled evaluation per batch.
+
+**Layering (and thread safety).**  ``PerfSession`` is the *resource*
+layer: it owns profile lifecycle (open / calibrate / save), the
+measurement cache, the amortized count engine, and the injectable timer
+seam.  The prediction *math* lives in the pure
+:class:`repro.api.engine.PredictEngine` it wraps
+(``session.predict_engine``).  Concurrent ``predict``/``predict_batch``
+calls on one session are safe — the predict engine and the count engine
+each serialize their internal state — which is what
+:mod:`repro.serving` relies on; ``open``/calibration, which mutate
+resources, are not meant to race.
 """
 from __future__ import annotations
 
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-import jax
-import jax.numpy as jnp
-
-from repro.api.errors import PredictionError, suggest_calibration_tags
-from repro.api.prediction import Prediction, assemble_predictions
-from repro.core.calibrate import gmre_of, relative_errors
+from repro.api.engine import DEFAULT_MODEL, PredictEngine
+from repro.api.errors import PredictionError
+from repro.api.prediction import Prediction
 from repro.core.countengine import (
     CountEngine,
     args_signature,
     callable_signature,
 )
 from repro.core.counting import FeatureCounts
-from repro.core.model import Model, _param_dtype
+from repro.core.model import Model
 from repro.core.uipick import CountingTimer, MeasurementKernel
 from repro.profiles.cache import MeasurementCache
 from repro.profiles.fingerprint import DeviceFingerprint
@@ -49,9 +57,7 @@ from repro.profiles.profile import (
     save_profile,
 )
 
-#: default fit to predict with when the caller names none and the profile
-#: carries several (the zoo's widest-scope form)
-DEFAULT_MODEL = "ovl_flop_mem"
+__all__ = ["DEFAULT_MODEL", "PerfSession", "PredictItem"]
 
 # one predict_batch item: a measurement kernel, a bare callable, or a
 # (callable, example_args) pair
@@ -59,9 +65,10 @@ PredictItem = Union[MeasurementKernel, Callable, Tuple[Callable, tuple]]
 
 
 class PerfSession:
-    """A loaded-and-validated machine profile plus everything needed to
-    predict with it: compiled per-model evaluators, the measurement cache,
-    and the injectable timer seam (used only if calibration runs)."""
+    """A loaded-and-validated machine profile plus every *resource* needed
+    to predict with it: the pure :class:`PredictEngine` (compiled
+    per-model evaluators), the measurement cache, the count engine, and
+    the injectable timer seam (used only if calibration runs)."""
 
     def __init__(self, profile: MachineProfile, *,
                  cache: Optional[MeasurementCache] = None,
@@ -80,16 +87,22 @@ class PerfSession:
         # how this session's profile came to be (observability: the CLI
         # prints it, tests assert the zero-timing warm path against it)
         self.calibration: Dict[str, Any] = dict(calibration or {})
-        # batched-evaluation observability: dispatches and (re)traces of
-        # the jit-compiled breakdown evaluator
-        self.eval_calls = 0
-        self.trace_count = 0
-        self._compiled: Dict[str, Callable] = {}
-        self._fit_diag: Dict[str, Dict[str, Any]] = {}
-        # resolved (ModelFit, Model) per fit name: ModelFit.model() builds
-        # a fresh Model (AST parse + breakdown-plan compile) — pay that
-        # once per fit, not once per predict on the serving hot path
-        self._resolved: Dict[str, Tuple[ModelFit, Model]] = {}
+        # the pure prediction core (model resolution + compiled batched
+        # evaluators); shared safely across request threads by a daemon
+        self.predict_engine = PredictEngine(profile)
+
+    # the batched-evaluation probes live on the predict engine now; these
+    # stay readable here so `session.eval_calls == 1`-style assertions
+    # (and the CLI's summary line) keep working unchanged
+    @property
+    def eval_calls(self) -> int:
+        """Compiled ``batched_breakdown`` dispatches performed."""
+        return self.predict_engine.eval_calls
+
+    @property
+    def trace_count(self) -> int:
+        """Jit (re)traces of the batched evaluator."""
+        return self.predict_engine.trace_count
 
     # ------------------------------------------------------------------
     # construction
@@ -214,9 +227,11 @@ class PerfSession:
         compiled call — zero kernel timings, no per-row Python dispatch.
 
         ``strict=True`` turns out-of-scope work into a typed
-        :class:`PredictionError` (naming the unmodeled feature and the
-        UIPiCK tags that would calibrate it); the default records such
-        features per prediction in ``Prediction.unmodeled``.
+        :class:`PredictionError` collecting EVERY violating kernel of the
+        batch (``error.violations`` maps each back to its index, naming
+        the unmodeled features and the UIPiCK tags that would calibrate
+        them); the default records such features per prediction in
+        ``Prediction.unmodeled``.
 
         Duplicate items — identical (content signature, argument shapes)
         — are counted ONCE and their feature rows broadcast, so a batch
@@ -226,10 +241,38 @@ class PerfSession:
         items = list(items)
         if not items:
             return []
+        self.predict_engine.resolve(model)      # fail fast, pre-counting
+        kernel_names, counts_rows = self._count_items(items, names)
+        return self.predict_engine.predict_rows(
+            counts_rows, kernel_names, model=model, strict=strict)
+
+    def try_predict_batch(self, items: Sequence[PredictItem], *,
+                          model: Optional[str] = None,
+                          names: Optional[Sequence[str]] = None,
+                          strict: bool = True
+                          ) -> List[Union[Prediction, PredictionError]]:
+        """Per-item error mode of :meth:`predict_batch` — the coalescing
+        daemon's entry point: position *i* of the result is either item
+        *i*'s :class:`Prediction` or its own :class:`PredictionError`, so
+        one out-of-scope request never fails the whole coalesced batch
+        (which still costs a single compiled evaluation)."""
+        items = list(items)
+        if not items:
+            return []
+        self.predict_engine.resolve(model)
+        kernel_names, counts_rows = self._count_items(items, names)
+        return self.predict_engine.try_predict_rows(
+            counts_rows, kernel_names, model=model, strict=strict)
+
+    def _count_items(self, items: Sequence[PredictItem],
+                     names: Optional[Sequence[str]]
+                     ) -> Tuple[List[str], List[FeatureCounts]]:
+        """The resource half of a batched predict: resolve item identity,
+        dedup by (signature, shapes), and gather counts through the cache
+        and count engine — never through a timer."""
         if names is not None and len(names) != len(items):
             raise ValueError(f"names has {len(names)} entries for "
                              f"{len(items)} items")
-        fit_name, mf, m = self._resolve_model(model)
         kernel_names: List[str] = []
         counts_rows: List[FeatureCounts] = []
         deduped: Dict[Any, FeatureCounts] = {}
@@ -242,39 +285,7 @@ class PerfSession:
                 if key is not None:
                     deduped[key] = counts
             counts_rows.append(counts)
-
-        unmodeled = [m.unmodeled_features(c) for c in counts_rows]
-        if strict:
-            for kname, extra in zip(kernel_names, unmodeled):
-                if extra:
-                    feat = next(iter(extra))
-                    tags = suggest_calibration_tags(feat)
-                    hint = (f"calibrate it with UIPiCK tags {tags}"
-                            if tags else
-                            "no built-in generator covers this class")
-                    raise PredictionError(
-                        f"kernel {kname!r} performs work outside the "
-                        f"scope of model {fit_name!r}: unmodeled "
-                        f"feature(s) {sorted(extra)}; {feat!r} — {hint}. "
-                        f"Widen the model, or predict with strict=False "
-                        f"to carry unmodeled features as diagnostics")
-
-        aligned = m.align(counts_rows)          # counts: absent == 0
-        dt = _param_dtype()
-        p_vec = jnp.asarray([mf.params[n] for n in m.param_names], dt)
-        parts = self._evaluator(m)(p_vec, jnp.asarray(aligned, dt))
-        self.eval_calls += 1
-        return assemble_predictions(
-            kernel_names=kernel_names,
-            fit_name=fit_name,
-            labels=m.breakdown_labels,
-            parts=parts,
-            feature_names=m.feature_names,
-            aligned=aligned,
-            unmodeled=unmodeled,
-            params=mf.params,
-            diagnostics=self._diagnostics_for(fit_name, mf, m),
-        )
+        return kernel_names, counts_rows
 
     # ------------------------------------------------------------------
     # static modelability audit
@@ -340,34 +351,7 @@ class PerfSession:
 
     def _resolve_model(self, model: Optional[str]
                        ) -> Tuple[str, ModelFit, Model]:
-        fits = self.profile.fits
-        name = model
-        if name is None:
-            if DEFAULT_MODEL in fits:
-                name = DEFAULT_MODEL
-            elif len(fits) == 1:
-                name = next(iter(fits))
-            else:
-                raise PredictionError(
-                    f"profile for {self.profile.fingerprint.id!r} carries "
-                    f"fits {self.profile.fit_names} and none is the "
-                    f"default {DEFAULT_MODEL!r}; pass model=<name>")
-        cached = self._resolved.get(name)
-        if cached is not None:
-            return name, *cached
-        try:
-            mf = self.profile.get_fit(name)
-        except ProfileError as e:
-            raise PredictionError(str(e)) from e
-        m = mf.model()
-        missing = [p for p in m.param_names if p not in mf.params]
-        if missing:
-            raise PredictionError(
-                f"fit {name!r} lacks fitted values for parameter(s) "
-                f"{missing} of its own expression — the profile was "
-                f"edited or corrupted; recalibrate")
-        self._resolved[name] = (mf, m)
-        return name, mf, m
+        return self.predict_engine.resolve(model)
 
     def _item_identity(self, item: PredictItem, idx: int
                        ) -> Tuple[str, Optional[Any], str]:
@@ -420,45 +404,6 @@ class PerfSession:
             fn, args = item
             return self.engine.counts_of_callable(fn, args, sig=sig)
         return self.engine.counts_of_callable(item, sig=sig)
-
-    def _evaluator(self, model: Model) -> Callable:
-        sig = model.signature()
-        fn = self._compiled.get(sig)
-        if fn is None:
-            def parts_fn(p_vec, F, _model=model):
-                # the Python body runs only while jax traces — this
-                # counter IS the trace-count probe tests assert against
-                self.trace_count += 1
-                return _model.batched_breakdown(p_vec, F)
-
-            fn = jax.jit(parts_fn)
-            self._compiled[sig] = fn
-        return fn
-
-    def _diagnostics_for(self, fit_name: str, mf: ModelFit, m: Model
-                         ) -> Dict[str, Any]:
-        diag = self._fit_diag.get(fit_name)
-        if diag is None:
-            diag = {
-                "fingerprint": self.profile.fingerprint.id,
-                "signature": mf.signature,
-                "residual_norm": mf.fit.residual_norm,
-                "iterations": mf.fit.iterations,
-                "converged": mf.fit.converged,
-                "trials": self.profile.trials,
-                "holdout_gmre": None,
-            }
-            holdout = self.profile.holdout
-            if holdout is not None and len(holdout):
-                try:
-                    diag["holdout_gmre"] = gmre_of(
-                        relative_errors(m, mf.params, holdout))
-                    diag["holdout_noise"] = holdout.noise_summary()
-                except ValueError:
-                    pass        # holdout lacks this model's columns
-            self._fit_diag[fit_name] = diag
-        return diag
-
 
 def _as_counting_timer(timer) -> CountingTimer:
     if isinstance(timer, CountingTimer):

@@ -36,6 +36,7 @@ import functools
 import hashlib
 import json
 import re
+import threading
 import time
 from dataclasses import dataclass
 from fractions import Fraction
@@ -350,6 +351,16 @@ class CountEngine:
     * ``hits``/``misses`` — count-cache lookups (concrete keys and
       symbolic families alike; a family reconstruction is one miss even
       though it probes several grid points).
+
+    **Thread safety.**  The engine is shared by every request thread of a
+    serving daemon, so all public lookups (``counts_for``,
+    ``counts_of_callable``, ``counts_batch``, ``symbolic``) and the
+    ``stats()`` snapshot serialize on one re-entrant lock: cache mutation,
+    counter updates, and persisted-store writes are atomic with the lookup
+    that caused them (two threads racing a cold kernel perform exactly ONE
+    trace, and ``hits + misses`` always equals the number of lookups).
+    The lock is allocated once at construction — the single-threaded warm
+    fast path pays one uncontended acquire, no per-lookup allocation.
     """
 
     def __init__(self, store: Any = None):
@@ -359,6 +370,10 @@ class CountEngine:
         self.trace_count = 0
         self._counts: Dict[str, FeatureCounts] = {}
         self._families: Dict[str, SymbolicCounts] = {}
+        # re-entrant: counts_batch holds it while delegating to counts_for
+        # and symbolic.  Held across cold traces on purpose — serializing
+        # the trace is what guarantees one trace per key under contention.
+        self._lock = threading.RLock()
 
     # -- tracing seam (every make_jaxpr in the engine goes through here) --
     def _trace(self, fn: Callable, args: Sequence[Any]) -> FeatureCounts:
@@ -385,15 +400,17 @@ class CountEngine:
         if not sig:
             # no content identity: (name, sizes) alone could collide two
             # different hand-built kernels — trace exactly, every time
-            self.misses += 1
-            return self._trace(kernel.fn, kernel.make_args())
+            with self._lock:
+                self.misses += 1
+                return self._trace(kernel.fn, kernel.make_args())
         key = self._digest({
             "kind": "kernel", "sig": sig, "name": kernel.name,
             "sizes": {k: int(v) for k, v in sorted(kernel.sizes.items())},
         })
-        return self._concrete(
-            key, persist=True,
-            build=lambda: (kernel.fn, kernel.make_args()))
+        with self._lock:
+            return self._concrete(
+                key, persist=True,
+                build=lambda: (kernel.fn, kernel.make_args()))
 
     def counts_of_callable(self, fn: Callable, args: Sequence[Any] = (),
                            *, sig: Optional[str] = None) -> FeatureCounts:
@@ -404,12 +421,14 @@ class CountEngine:
             sig = callable_signature(fn)
         if not sig:
             # no stable identity: always an exact per-shape trace
-            self.misses += 1
-            return self._trace(fn, args)
+            with self._lock:
+                self.misses += 1
+                return self._trace(fn, args)
         key = self._digest({"kind": "fn", "sig": sig,
                             "args": args_signature(args)})
-        return self._concrete(key, persist=True,
-                              build=lambda: (fn, args))
+        with self._lock:
+            return self._concrete(key, persist=True,
+                                  build=lambda: (fn, args))
 
     def _concrete(self, key: str, persist: bool,
                   build: Callable[[], Tuple[Callable, Sequence[Any]]]
@@ -445,63 +464,67 @@ class CountEngine:
         Probe traces are the ONLY traces a symbolic family ever costs."""
         key = self._digest({"kind": "family", "family": family.key,
                             "version": COUNT_STORE_VERSION})
-        sym = self._families.get(key)
-        if sym is not None:
-            self.hits += 1
+        with self._lock:
+            sym = self._families.get(key)
+            if sym is not None:
+                self.hits += 1
+                return sym
+            if self.store is not None:
+                loaded = self._load_json(self._family_path(key))
+                if loaded is not None and loaded.get("key") == key \
+                        and isinstance(loaded.get("counts"), dict):
+                    try:
+                        sym = _symbolic_from_json(loaded)
+                    except (KeyError, TypeError, ValueError,
+                            ZeroDivisionError):
+                        sym = None      # corrupt entry reads as a miss
+                    if sym is not None:
+                        self._families[key] = sym
+                        self.hits += 1
+                        return sym
+            self.misses += 1
+
+            def probe(**sizes) -> FeatureCounts:
+                k = family.build(**sizes)
+                return self._trace(k.fn, k.make_args())
+
+            sym = parametric_counts_from(probe, family.var_degrees,
+                                         base=family.base,
+                                         scale=family.scale)
+            self._families[key] = sym
+            if self.store is not None:
+                payload = _symbolic_to_json(sym)
+                payload.update(version=COUNT_STORE_VERSION, key=key,
+                               family=family.key)
+                self._save_json(self._family_path(key), payload)
             return sym
-        if self.store is not None:
-            loaded = self._load_json(self._family_path(key))
-            if loaded is not None and loaded.get("key") == key \
-                    and isinstance(loaded.get("counts"), dict):
-                try:
-                    sym = _symbolic_from_json(loaded)
-                except (KeyError, TypeError, ValueError, ZeroDivisionError):
-                    sym = None          # corrupt entry reads as a miss
-                if sym is not None:
-                    self._families[key] = sym
-                    self.hits += 1
-                    return sym
-        self.misses += 1
-
-        def probe(**sizes) -> FeatureCounts:
-            k = family.build(**sizes)
-            return self._trace(k.fn, k.make_args())
-
-        sym = parametric_counts_from(probe, family.var_degrees,
-                                     base=family.base, scale=family.scale)
-        self._families[key] = sym
-        if self.store is not None:
-            payload = _symbolic_to_json(sym)
-            payload.update(version=COUNT_STORE_VERSION, key=key,
-                           family=family.key)
-            self._save_json(self._family_path(key), payload)
-        return sym
 
     def counts_batch(self, kernels: Sequence[MeasurementKernel]
                      ) -> List[FeatureCounts]:
         """Counts for a whole battery: kernels carrying the same symbolic
         family share ONE reconstruction and get their rows from vectorized
         polynomial evaluation; the rest go through the concrete cache."""
-        out: List[Optional[FeatureCounts]] = [None] * len(kernels)
-        groups: Dict[str, Tuple[KernelFamily, List[int]]] = {}
-        for i, k in enumerate(kernels):
-            fam = k.family
-            if fam is not None and set(fam.var_degrees) == set(k.sizes):
-                groups.setdefault(fam.key, (fam, []))[1].append(i)
-            else:
-                out[i] = self.counts_for(k)
-        for fam, idxs in groups.values():
-            sym = self.symbolic(fam)
-            env = {v: np.asarray([kernels[i].sizes[v] for i in idxs],
-                                 np.float64)
-                   for v in fam.var_degrees}
-            matrix = sym.at_batch(**env)
-            for j, i in enumerate(idxs):
-                out[i] = FeatureCounts(
-                    {fid: float(col[j]) for fid, col in matrix.items()
-                     if col[j] != 0.0})
-        return [fc if fc is not None else FeatureCounts()
-                for fc in out]
+        with self._lock:
+            out: List[Optional[FeatureCounts]] = [None] * len(kernels)
+            groups: Dict[str, Tuple[KernelFamily, List[int]]] = {}
+            for i, k in enumerate(kernels):
+                fam = k.family
+                if fam is not None and set(fam.var_degrees) == set(k.sizes):
+                    groups.setdefault(fam.key, (fam, []))[1].append(i)
+                else:
+                    out[i] = self.counts_for(k)
+            for fam, idxs in groups.values():
+                sym = self.symbolic(fam)
+                env = {v: np.asarray([kernels[i].sizes[v] for i in idxs],
+                                     np.float64)
+                       for v in fam.var_degrees}
+                matrix = sym.at_batch(**env)
+                for j, i in enumerate(idxs):
+                    out[i] = FeatureCounts(
+                        {fid: float(col[j]) for fid, col in matrix.items()
+                         if col[j] != 0.0})
+            return [fc if fc is not None else FeatureCounts()
+                    for fc in out]
 
     # -- persistence --------------------------------------------------------
     def _digest(self, payload: Dict[str, Any]) -> str:
@@ -590,6 +613,10 @@ class CountEngine:
 
     # -- observability -------------------------------------------------------
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "trace_count": self.trace_count,
-                "families": len(self._families)}
+        """A *consistent* counter snapshot: taken under the engine lock so
+        a concurrent lookup can never be observed half-applied (e.g. a
+        miss counted whose trace has not landed in ``trace_count`` yet)."""
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "trace_count": self.trace_count,
+                    "families": len(self._families)}

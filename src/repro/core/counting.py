@@ -4,8 +4,10 @@ The paper walks a polyhedral program representation, counting per-statement
 operations × statement trip counts.  The JAX analogue walks a
 ``ClosedJaxpr``: equations inside ``scan``/``while`` bodies are multiplied
 by the (statically known) trip count, ``cond`` branches are averaged
-(matching the paper's divergent-control-flow cost accounting), and
-``pjit``/``remat`` calls are inlined.
+(matching the paper's divergent-control-flow cost accounting — except
+inside Pallas kernel bodies, where the static cost analyzer resolves
+``program_id``-derived predicates and charges each grid program its
+actual branch), and ``pjit``/``remat`` calls are inlined.
 
 Counted feature classes (the TPU translation of the paper's features):
   * arithmetic  — by (op-kind, dtype); ``dot_general`` is counted as *madd*

@@ -1,0 +1,11 @@
+"""``python -m repro.serve`` — alias for the serving-daemon CLI.
+
+The implementation lives in :mod:`repro.serving.cli`; this module only
+provides the memorable entry point.
+"""
+import sys
+
+from repro.serving.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

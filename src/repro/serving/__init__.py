@@ -1,0 +1,35 @@
+"""``repro.serving`` — the long-lived prediction daemon.
+
+Calibration is once-per-machine; prediction is the steady state.  This
+package keeps that steady state *hot*: one open :class:`PerfSession` per
+profile (compiled ``batched_breakdown`` evaluator, warm count store)
+parked behind an HTTP endpoint, with concurrent in-flight requests
+coalesced into single ``predict_batch`` evaluations and an LRU of open
+profiles for multi-tenant fleets.
+
+* :class:`CoalescingBatcher` — concurrent ``predict`` calls → one
+  batched evaluation; per-item error mapping (one out-of-scope request
+  never fails its batch-mates).
+* :class:`SessionPool` — LRU of (profile → hot session + batcher).
+* :class:`PredictionDaemon` — the HTTP surface
+  (``/predict`` ``/stats`` ``/healthz`` ``/shutdown``).
+* ``python -m repro.serve`` — the CLI (:mod:`repro.serving.cli`), with a
+  ``--smoke`` mode that turns the serving guarantees (zero kernel
+  timings, ≤1 count lookup per unique kernel, fewer compiled evals than
+  requests) into a CI exit code.
+
+Everything rides the thread-safety contract of :mod:`repro.api`: the
+predict engine and count engine serialize internally, so one session is
+safely shared across every request thread.
+"""
+from repro.serving.coalesce import BatcherClosed, CoalescingBatcher
+from repro.serving.daemon import PredictionDaemon, prediction_payload
+from repro.serving.pool import SessionPool
+
+__all__ = [
+    "BatcherClosed",
+    "CoalescingBatcher",
+    "PredictionDaemon",
+    "SessionPool",
+    "prediction_payload",
+]

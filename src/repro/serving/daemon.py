@@ -1,0 +1,217 @@
+"""The prediction daemon: a long-lived HTTP endpoint over hot sessions.
+
+Request/response protocol (JSON over stdlib HTTP — no third-party deps):
+
+* ``POST /predict`` — body ``{"kernel": <name>, "model"?: <fit>,
+  "profile"?: <path>, "strict"?: bool}``.  The kernel name is resolved
+  against the registered target vocabulary (by default
+  :func:`repro.analysis.targets.kernel_targets` — the same 8 built-ins
+  the lint CLI audits); the request parks on the profile's
+  :class:`CoalescingBatcher` and the reply carries seconds + per-term
+  breakdown.  Out-of-scope strict requests get their OWN 422 (batch-mates
+  are unaffected); unknown kernels 404; malformed bodies 400.
+* ``GET /stats`` — the daemon's observability ledger: kernel timings
+  performed (must stay 0 on the serving path), compiled
+  ``batched_breakdown`` dispatches, jit traces, count lookups, batcher
+  coalescing counters, and pool opens/evictions.
+* ``GET /healthz`` — liveness.
+* ``POST /shutdown`` — clean stop (drains in-flight batches).
+
+Each handler thread blocks on its own future while the drainer thread
+coalesces the burst into one batched evaluation — concurrency is what
+*creates* the batch.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional, Tuple
+
+from repro.api import PerfSession, Prediction, PredictionError
+from repro.serving.coalesce import CoalescingBatcher
+from repro.serving.pool import SessionPool
+
+
+class _Server(ThreadingHTTPServer):
+    daemon_threads = True
+    # a coalescing daemon's whole point is simultaneous connects: the
+    # stdlib default backlog of 5 RESETS the rest of a 64-way burst
+    request_queue_size = 128
+
+
+def _target_vocabulary() -> Dict[str, Tuple[Any, tuple]]:
+    """name → (fn, abstract args) for every built-in kernel target."""
+    from repro.analysis.targets import kernel_targets
+    return {t.name: (t.fn, t.args) for t in kernel_targets()}
+
+
+def prediction_payload(pred: Prediction) -> Dict[str, Any]:
+    """The JSON body of a successful prediction reply."""
+    return {
+        "kernel": pred.kernel,
+        "model": pred.model,
+        "seconds": float(pred.seconds),
+        "breakdown": {k: float(v) for k, v in pred.breakdown.items()},
+        "unmodeled": sorted(pred.unmodeled),
+    }
+
+
+class PredictionDaemon:
+    """A :class:`ThreadingHTTPServer` wrapping one default hot session
+    (plus an LRU :class:`SessionPool` for requests naming other
+    profiles)."""
+
+    def __init__(self, session: PerfSession, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 max_batch: int = 256, max_wait_s: float = 0.002,
+                 max_open: int = 4,
+                 targets: Optional[Dict[str, Tuple[Any, tuple]]] = None,
+                 pool: Optional[SessionPool] = None):
+        self.session = session
+        # injectable vocabulary: tests serve tiny lambdas, production
+        # serves the built-in kernel targets
+        self.targets = dict(targets) if targets is not None \
+            else _target_vocabulary()
+        self.batcher = CoalescingBatcher(session, max_batch=max_batch,
+                                         max_wait_s=max_wait_s)
+        self.pool = pool if pool is not None else SessionPool(
+            max_open=max_open, cache=session.cache,
+            max_batch=max_batch, max_wait_s=max_wait_s)
+        self._server = _Server((host, port), self._handler_class())
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        host, port = self._server.server_address[:2]
+        return str(host), int(port)
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}"
+
+    def start(self) -> "PredictionDaemon":
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, daemon=True,
+            name="repro-serve-http")
+        self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Foreground mode (the CLI's non-smoke path)."""
+        try:
+            self._server.serve_forever()
+        finally:
+            self.close()
+
+    def shutdown(self) -> None:
+        self._server.shutdown()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+
+    def close(self) -> None:
+        self.shutdown()
+        self.batcher.close()
+        self.pool.close()
+        self._server.server_close()
+
+    # ------------------------------------------------------------------
+    # request handling (thread-per-request; blocking on batcher futures)
+    # ------------------------------------------------------------------
+
+    def _resolve_batcher(self, profile: Optional[str]
+                         ) -> CoalescingBatcher:
+        if profile is None:
+            return self.batcher
+        _session, batcher = self.pool.get(profile)
+        return batcher
+
+    def handle_predict(self, body: Dict[str, Any]
+                       ) -> Tuple[int, Dict[str, Any]]:
+        kernel = body.get("kernel")
+        if not isinstance(kernel, str):
+            return 400, {"error": "body must carry a 'kernel' name"}
+        target = self.targets.get(kernel)
+        if target is None:
+            return 404, {"error": f"unknown kernel {kernel!r}",
+                         "known": sorted(self.targets)}
+        fn, args = target
+        batcher = self._resolve_batcher(body.get("profile"))
+        try:
+            pred = batcher.predict(
+                (fn, tuple(args)), name=kernel,
+                model=body.get("model"),
+                strict=bool(body.get("strict", False)))
+        except PredictionError as e:
+            return 422, {"error": str(e), "violations": e.violations}
+        return 200, prediction_payload(pred)
+
+    def stats(self) -> Dict[str, Any]:
+        eng = self.session.engine
+        return {
+            "timings": self.session.timer.calls,
+            "eval_calls": self.session.eval_calls,
+            "trace_count": self.session.trace_count,
+            "count_lookups": eng.hits + eng.misses,
+            "count_traces": eng.trace_count,
+            "batcher": self.batcher.stats(),
+            "pool": self.pool.stats(),
+        }
+
+    def _handler_class(self):
+        daemon = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, fmt, *args):    # noqa: D102 — quiet
+                pass
+
+            def _reply(self, status: int, payload: Dict[str, Any]):
+                data = json.dumps(payload).encode()
+                self.send_response(status)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(data)))
+                self.end_headers()
+                self.wfile.write(data)
+
+            def do_GET(self):                     # noqa: N802 — stdlib
+                if self.path == "/healthz":
+                    self._reply(200, {"ok": True})
+                elif self.path == "/stats":
+                    self._reply(200, daemon.stats())
+                else:
+                    self._reply(404, {"error": f"no route {self.path}"})
+
+            def do_POST(self):                    # noqa: N802 — stdlib
+                if self.path == "/shutdown":
+                    self._reply(200, {"ok": True})
+                    # shut down from another thread: shutdown() blocks
+                    # until serve_forever returns, which waits on THIS
+                    # handler otherwise
+                    threading.Thread(target=daemon._server.shutdown,
+                                     daemon=True).start()
+                    return
+                if self.path != "/predict":
+                    self._reply(404, {"error": f"no route {self.path}"})
+                    return
+                try:
+                    n = int(self.headers.get("Content-Length", 0))
+                    body = json.loads(self.rfile.read(n) or b"{}")
+                    if not isinstance(body, dict):
+                        raise ValueError("body must be a JSON object")
+                except (ValueError, json.JSONDecodeError) as e:
+                    self._reply(400, {"error": f"bad request body: {e}"})
+                    return
+                try:
+                    status, payload = daemon.handle_predict(body)
+                except Exception as e:  # noqa: BLE001 — typed reply
+                    status, payload = 500, {"error": str(e)}
+                self._reply(status, payload)
+
+        return Handler

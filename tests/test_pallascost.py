@@ -209,3 +209,104 @@ def test_session_predicts_pallas_wrapper_with_memory_term():
     mem_terms = {k: v for k, v in pred.breakdown.items()
                  if "f_mem_contig_float32_load" in k}
     assert mem_terms and sum(mem_terms.values()) > 0
+
+
+# ---------------------------------------------------------------------------
+# grid-edge branches: pl.when charged to the programs that execute it
+# ---------------------------------------------------------------------------
+
+
+def _find_pallas_eqn(jaxpr):
+    """The pallas_call equation anywhere under ``jaxpr`` (the wrappers
+    jit, so it sits inside a pjit sub-jaxpr)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            return eqn
+        for val in eqn.params.values():
+            inner = getattr(val, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                found = _find_pallas_eqn(inner)
+                if found is not None:
+                    return found
+    return None
+
+
+@pytest.mark.parametrize("M,N,K,b", [
+    (512, 512, 1024, 256),
+    (256, 256, 512, 128),
+])
+def test_matmul_grid_edge_when_blocks_counted_exactly(M, N, K, b):
+    """The accumulator init (``pl.when(k == 0)``) runs on gm·gn programs
+    and the flush (``pl.when(k == n_k - 1)``) on another gm·gn — not on
+    all P = gm·gn·nk.  Per-program predicate resolution makes the VMEM
+    ref counts land on the exact closed form instead of the branch
+    average."""
+    fn = functools.partial(ops.matmul, block_m=b, block_n=b, block_k=b)
+    c = count_fn(fn, _f32(M, K), _f32(K, N))
+    gm, gn, nk = M // b, N // b, K // b
+    P = gm * gn * nk
+    # stores: every program stores the += accumulator; k==0 programs also
+    # store the zero init; k==nk-1 programs store the o_ref write
+    assert c["f_vmem_ref_float32_store"] == b * b * (P + 2 * gm * gn)
+    # loads: a/b tiles + the += accumulator read on every program, plus
+    # the flush's accumulator read on the last-k programs only
+    assert c["f_vmem_ref_float32_load"] == b * b * (3 * P + gm * gn)
+    # the += add itself runs on every program, edge blocks add nothing
+    assert c["f_op_float32_add"] == b * b * P
+
+
+def test_matmul_branch_resolution_emits_no_averaging_note():
+    from repro.analysis.pallascost import analyze_pallas_call
+
+    fn = functools.partial(ops.matmul, block_m=128, block_n=128,
+                           block_k=128)
+    jaxpr = jax.make_jaxpr(fn)(_f32(256, 256), _f32(256, 256))
+    eqn = _find_pallas_eqn(jaxpr.jaxpr)
+    assert eqn is not None
+    cost = analyze_pallas_call(eqn)
+    # both pl.when predicates are affine in program_id(2): resolved, not
+    # averaged — the analyzer has nothing to warn about
+    assert cost.notes == ()
+
+
+def _data_dependent_when(x):
+    def body(x_ref, o_ref):
+        @pl.when(x_ref[0, 0] > 0.0)
+        def _():
+            o_ref[...] = x_ref[...] + 1.0
+
+    return pl.pallas_call(
+        body,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+        interpret=True)(x)
+
+
+def test_data_dependent_when_falls_back_to_average_with_note():
+    from repro.analysis.pallascost import analyze_pallas_call
+
+    args = (_f32(32, 128),)
+    jaxpr = jax.make_jaxpr(_data_dependent_when)(*args)
+    eqn = _find_pallas_eqn(jaxpr.jaxpr)
+    cost = analyze_pallas_call(eqn)
+    assert len(cost.notes) == 1
+    assert "not a resolvable function of program_id" in cost.notes[0]
+    # averaged: 4 programs × 1024 adds × 1/2 branch weight
+    c = count_fn(_data_dependent_when, *args)
+    assert c["f_op_float32_add"] == 4 * 8 * 128 // 2
+
+
+def test_averaged_branch_surfaces_as_info_diagnostic():
+    diags = audit_callable(_data_dependent_when, (_f32(32, 128),),
+                           "kernel:ddwhen")
+    flagged = [d for d in diags if d.code == "pallas-averaged-branch"]
+    assert len(flagged) == 1 and flagged[0].severity == "info"
+    assert "averaged" in flagged[0].message
+    # resolvable grid-edge branches (matmul) must NOT trigger the note
+    clean = audit_callable(
+        functools.partial(ops.matmul, block_m=128, block_n=128,
+                          block_k=128),
+        (_f32(256, 256), _f32(256, 256)), "kernel:matmul")
+    assert not any(d.code == "pallas-averaged-branch" for d in clean)
