@@ -23,6 +23,9 @@ Benches (one per paper table/figure):
   counting amortized symbolic counts — count-matrix construction via
           symbolic kernel families vs per-size tracing; predict_batch
           dedup vs no-dedup
+  fleet   predictive routing — µs per routing decision (zero timings),
+          makespan: round-robin vs predicted-makespan vs clairvoyant
+          oracle on a heterogeneous synthetic fleet
 """
 import sys
 import time
@@ -32,6 +35,7 @@ def main() -> None:
     from benchmarks import paper_figures as pf
     from benchmarks.calibration_bench import calibration_rows
     from benchmarks.counting_bench import counting_rows
+    from benchmarks.fleet_bench import fleet_rows
     from benchmarks.predict_bench import predict_rows
     from benchmarks.roofline_bench import roofline_rows
     from benchmarks.serve_bench import serve_rows
@@ -43,6 +47,7 @@ def main() -> None:
         "predict": predict_rows,
         "serve": serve_rows,
         "counting": counting_rows,
+        "fleet": fleet_rows,
         "fig1": pf.fig1_matmul_simple,
         "fig2": pf.fig2_madd_component,
         "fig5": pf.fig5_overlap,

@@ -49,3 +49,29 @@ print(report.to_markdown())
 print("The nonlinear overlap model is no worse than either linear form on")
 print("every machine (up to the timing-noise floor) — the paper's")
 print("accuracy-vs-scope ordering, asserted in tests/test_synthdev_study.py.")
+
+# ---------------------------------------------------------------------------
+# Closing step: the merged fleet bundle feeds straight into routing —
+# the study → scheduler handoff (paper's first motivating use case)
+# ---------------------------------------------------------------------------
+from repro.core.uipick import ALL_GENERATORS, KernelCollection, \
+    MatchCondition
+from repro.fleet import FleetRouter
+
+router = FleetRouter.from_profiles(profiles)
+workload = KernelCollection(ALL_GENERATORS).generate_kernels(
+    ["matmul_sq", "mem_stream", "dtype:float32", "prefetch:False",
+     "tile:16", "pattern:contig", "n:512,1024", "nelements:1048576",
+     "n_arrays:1"],
+    MatchCondition.INTERSECT)
+
+print()
+print(f"== fleet routing: {len(workload)} workloads over "
+      f"{len(router.machines)} machines (policy {router.policy})")
+for decision in router.route_batch(workload,
+                                   names=[k.name for k in workload]):
+    prices = "  ".join(f"{m.split('_')[1]}:{s:.2e}s"
+                       for m, s in sorted(decision.predicted.items()))
+    print(f"   {decision.kernel:42s} -> {decision.machine}   [{prices}]")
+print(f"   routing performed {router.timings()} kernel timings — every")
+print("   decision priced the workload on all machines from counts alone.")

@@ -17,6 +17,9 @@ cheap and cycle-free:
               :class:`DeviceFingerprint`, :class:`ProfileError`
 * studies:    :func:`run_study`, :func:`compare_profiles`,
               :func:`scope_accuracy_sweep`, :data:`MODEL_ZOO`
+* fleet:      :class:`FleetRouter`, :class:`FleetHealth`,
+              :class:`RoutingDecision` (``repro.fleet`` — predictive
+              load balancing over machine profiles)
 
 Anything not listed here is internal layering: importable, but subject to
 refactoring between releases.
@@ -57,6 +60,10 @@ _EXPORTS = {
     "save_profile": "repro.profiles",
     "MeasurementCache": "repro.profiles",
     "DeviceFingerprint": "repro.profiles",
+    # fleet
+    "FleetRouter": "repro.fleet",
+    "FleetHealth": "repro.fleet",
+    "RoutingDecision": "repro.fleet",
     # studies
     "MODEL_ZOO": "repro.studies",
     "run_study": "repro.studies",

@@ -11,12 +11,16 @@ features; examples/autotune_variants.py demonstrates the user-facing flow.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.calibrate import FitResult
-from repro.core.counting import count_fn
+from repro.core.countengine import CountEngine
 from repro.core.model import Model
+
+# ranking shares one engine by default so repeated selections over the
+# same variant set hit the in-process count memo instead of re-tracing
+_ENGINE = CountEngine()
 
 
 @dataclass
@@ -24,7 +28,7 @@ class Variant:
     name: str
     fn: Callable
     make_args: Callable[[], tuple]
-    meta: Dict = None
+    meta: Dict = field(default_factory=dict)
 
 
 @dataclass
@@ -35,8 +39,10 @@ class RankedVariant:
 
 
 def predict_time(model: Model, params: Mapping[str, float],
-                 variant: Variant) -> float:
-    counts = count_fn(variant.fn, *variant.make_args())
+                 variant: Variant, *,
+                 engine: Optional[CountEngine] = None) -> float:
+    eng = engine if engine is not None else _ENGINE
+    counts = eng.counts_of_callable(variant.fn, variant.make_args())
     return float(model.evaluate(params, counts))
 
 
@@ -47,12 +53,13 @@ def rank_variants(
     *,
     measure: bool = False,
     trials: int = 10,
+    engine: Optional[CountEngine] = None,
 ) -> List[RankedVariant]:
     if isinstance(params, FitResult):
         params = params.params
     out = []
     for v in variants:
-        pred = predict_time(model, params, v)
+        pred = predict_time(model, params, v, engine=engine)
         meas = None
         if measure:
             from repro.core.uipick import MeasurementKernel
@@ -63,8 +70,9 @@ def rank_variants(
     return sorted(out, key=lambda r: r.predicted_time)
 
 
-def select_variant(model, params, variants) -> Variant:
-    ranked = rank_variants(model, params, variants)
+def select_variant(model, params, variants, *,
+                   engine: Optional[CountEngine] = None) -> Variant:
+    ranked = rank_variants(model, params, variants, engine=engine)
     best = ranked[0].name
     return next(v for v in variants if v.name == best)
 

@@ -1,0 +1,67 @@
+"""``repro.fleet`` — predictive routing across a fleet of machine profiles.
+
+The paper's first motivating use case for cheap cross-machine models,
+built out of the pieces earlier tiers shipped:
+
+* :class:`FleetRouter` — open N machine profiles, price every incoming
+  workload on all of them via ``predict_batch`` (zero timings, one
+  compiled evaluation per machine), and route by predicted completion
+  time: predicted cost + an outstanding-load ledger, divided by a health
+  weight.  Policies: ``round_robin`` (the model-blind baseline),
+  ``cheapest``, ``least_loaded``, ``predicted_makespan`` (default).
+* :class:`FleetHealth` — the fleet-wide generalization of
+  :class:`repro.runtime.StragglerMonitor`: per-machine EWMA of
+  observed-vs-predicted runtime skew.  Drifted machines get their
+  routing weight demoted and, past a threshold, a latched recalibration
+  flag — closing the loop back into ``python -m repro.calibrate``.
+* :func:`simulate_fleet` / :func:`heavy_tailed_jobs` — a deterministic
+  discrete-event simulator over synthetic ground-truth fleets
+  (:mod:`repro.testing.synthdev`), so CI asserts "predictive routing
+  beats round-robin" and "health demotion recovers a degraded fleet's
+  makespan" as hard gates on CPU in seconds.
+
+CLI: ``python -m repro.fleet`` (``route`` / ``simulate`` / ``health``).
+The serving daemon mounts the same router at ``POST /route`` /
+``GET /fleet`` / ``POST /complete`` (see :mod:`repro.serving`).
+
+Thread safety, by layer (mirroring :mod:`repro.api`): prediction through
+each machine's :class:`~repro.api.PerfSession` is thread-safe (pure
+``PredictEngine`` + internally-serialized count engine, one engine
+SHARED across the fleet so a workload is counted once, not N times);
+:class:`FleetHealth` serializes its skew ledger; the router guards its
+outstanding-load ledger and round-robin cursor with one lock, taken
+after predictions and never while holding the health lock.  So daemon
+handler threads may ``route``/``complete``/``stats`` concurrently;
+construction and ``replace_session``/``recalibrate`` — which swap
+resources — follow the same single-writer convention as session
+open/calibrate.
+"""
+from repro.fleet.health import FleetHealth, HealthEvent, MachineHealth
+from repro.fleet.router import (
+    DEFAULT_POLICY,
+    POLICIES,
+    FleetRouter,
+    RoutingDecision,
+)
+from repro.fleet.sim import (
+    Degradation,
+    Job,
+    SimReport,
+    heavy_tailed_jobs,
+    simulate_fleet,
+)
+
+__all__ = [
+    "DEFAULT_POLICY",
+    "POLICIES",
+    "Degradation",
+    "FleetHealth",
+    "FleetRouter",
+    "HealthEvent",
+    "Job",
+    "MachineHealth",
+    "RoutingDecision",
+    "SimReport",
+    "heavy_tailed_jobs",
+    "simulate_fleet",
+]

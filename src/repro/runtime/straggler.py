@@ -42,13 +42,14 @@ class StragglerMonitor:
 
     def observe(self, step: int, wall_s: float) -> Optional[StragglerEvent]:
         exp = self.expectation()
-        self._times.append(wall_s)
-        if exp is None:
-            return None
-        if wall_s > self.slack * exp:
+        if exp is not None and wall_s > self.slack * exp:
+            # flagged samples stay OUT of the running-median window:
+            # folding them in would inflate the expectation until
+            # repeated stragglers look normal and mask themselves
             ev = StragglerEvent(step, wall_s, exp, wall_s / exp)
             self.events.append(ev)
             if self.on_straggler:
                 self.on_straggler(ev)
             return ev
+        self._times.append(wall_s)
         return None

@@ -59,6 +59,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="coalescing window: how long the drainer lingers "
                          "for a burst's siblings")
+    ap.add_argument("--fleet", action="append", default=[],
+                    metavar="PROFILE",
+                    help="mount a fleet router over these machine "
+                         "profiles (repeatable): adds POST /route, "
+                         "POST /complete, GET /fleet")
+    ap.add_argument("--fleet-policy", default="predicted_makespan",
+                    help="routing policy for the mounted fleet router")
     ap.add_argument("--smoke", action="store_true",
                     help="self-driving CI smoke: concurrent burst against "
                          "an in-process daemon, guarantees as exit code")
@@ -71,12 +78,17 @@ def build_parser() -> argparse.ArgumentParser:
 
 def _open_daemon(args) -> PredictionDaemon:
     session = PerfSession.open(args.profile, cache=args.cache_dir)
+    router = None
+    if args.fleet:
+        from repro.fleet import FleetRouter
+        router = FleetRouter.open(args.fleet, cache=args.cache_dir,
+                                  policy=args.fleet_policy)
     return PredictionDaemon(
         session, host=args.host,
         port=0 if args.smoke else args.port,
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1e3,
-        max_open=args.max_open)
+        max_open=args.max_open, router=router)
 
 
 def _post(url: str, body: Dict[str, Any], timeout: float = 60.0
@@ -135,6 +147,32 @@ def run_smoke(args) -> int:
             if r["status"] == 200 and r["body"]["seconds"] <= 0:
                 failures.append(f"non-positive prediction: {r['body']}")
                 break
+
+        if daemon.router is not None:
+            # fleet leg: /route must price every machine, dispatch, and
+            # never time a kernel; /complete drains; /fleet reports
+            routed = [_post(f"{daemon.url}/route", {"kernel": n})
+                      for n in names[:4]]
+            bad = [r for r in routed if r["status"] != 200]
+            if bad:
+                failures.append(f"/route failed: {bad[0]}")
+            else:
+                spread = {r["body"]["machine"] for r in routed}
+                for r in routed:
+                    _post(f"{daemon.url}/complete",
+                          {"machine": r["body"]["machine"],
+                           "predicted_s": r["body"]["predicted_s"],
+                           "observed_s": r["body"]["predicted_s"]})
+                fleet = _get(f"{daemon.url}/fleet")
+                if fleet["timings"] != 0:
+                    failures.append(f"fleet routing timed a kernel "
+                                    f"({fleet['timings']} timer calls)")
+                if any(v > 1e-12 for v in fleet["outstanding"].values()):
+                    failures.append(f"/complete left outstanding load: "
+                                    f"{fleet['outstanding']}")
+                print(f"serve smoke: routed {len(routed)} kernels over "
+                      f"{len(fleet['machines'])} machines "
+                      f"({len(spread)} distinct), 0 timings")
 
         stats = _get(f"{daemon.url}/stats")
         n_unique = len({b["kernel"] for b in burst})

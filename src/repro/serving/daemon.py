@@ -17,6 +17,21 @@ Request/response protocol (JSON over stdlib HTTP — no third-party deps):
 * ``GET /healthz`` — liveness.
 * ``POST /shutdown`` — clean stop (drains in-flight batches).
 
+A daemon constructed with a :class:`~repro.fleet.FleetRouter` also
+speaks the fleet protocol:
+
+* ``POST /route`` — body ``{"kernel": <name>, "model"?: <fit>,
+  "policy"?: <policy>, "dispatch"?: bool}``.  Prices the kernel on every
+  fleet machine (zero timings) and replies with the chosen machine, the
+  per-machine price table, and the ledger/health snapshots the decision
+  used.  ``dispatch`` (default true) charges the chosen machine's
+  outstanding-load ledger.
+* ``POST /complete`` — body ``{"machine": <id>, "predicted_s": <s>,
+  "observed_s"?: <s>}``.  Drains the ledger; an observed time feeds the
+  health layer's observed-vs-predicted skew (demotion/recalibration).
+* ``GET /fleet`` — the router's ledger: machines, outstanding load,
+  per-machine health/weights, and machines flagged for recalibration.
+
 Each handler thread blocks on its own future while the drainer thread
 coalesces the burst into one batched evaluation — concurrency is what
 *creates* the batch.
@@ -67,8 +82,11 @@ class PredictionDaemon:
                  max_batch: int = 256, max_wait_s: float = 0.002,
                  max_open: int = 4,
                  targets: Optional[Dict[str, Tuple[Any, tuple]]] = None,
-                 pool: Optional[SessionPool] = None):
+                 pool: Optional[SessionPool] = None,
+                 router: Optional[Any] = None):
         self.session = session
+        # optional fleet router: mounts /route, /complete, and /fleet
+        self.router = router
         # injectable vocabulary: tests serve tiny lambdas, production
         # serves the built-in kernel targets
         self.targets = dict(targets) if targets is not None \
@@ -118,6 +136,8 @@ class PredictionDaemon:
         self.shutdown()
         self.batcher.close()
         self.pool.close()
+        if self.router is not None:
+            self.router.close()
         self._server.server_close()
 
     # ------------------------------------------------------------------
@@ -151,9 +171,60 @@ class PredictionDaemon:
             return 422, {"error": str(e), "violations": e.violations}
         return 200, prediction_payload(pred)
 
+    def handle_route(self, body: Dict[str, Any]
+                     ) -> Tuple[int, Dict[str, Any]]:
+        if self.router is None:
+            return 503, {"error": "no fleet router mounted; start the "
+                                  "daemon with --fleet PROFILE..."}
+        kernel = body.get("kernel")
+        if not isinstance(kernel, str):
+            return 400, {"error": "body must carry a 'kernel' name"}
+        target = self.targets.get(kernel)
+        if target is None:
+            return 404, {"error": f"unknown kernel {kernel!r}",
+                         "known": sorted(self.targets)}
+        fn, args = target
+        try:
+            decision = self.router.route(
+                (fn, tuple(args)), name=kernel,
+                model=body.get("model"), policy=body.get("policy"),
+                dispatch=bool(body.get("dispatch", True)))
+        except ValueError as e:
+            return 400, {"error": str(e)}
+        except PredictionError as e:
+            return 422, {"error": str(e), "violations": e.violations}
+        return 200, decision.to_dict()
+
+    def handle_complete(self, body: Dict[str, Any]
+                        ) -> Tuple[int, Dict[str, Any]]:
+        if self.router is None:
+            return 503, {"error": "no fleet router mounted; start the "
+                                  "daemon with --fleet PROFILE..."}
+        machine = body.get("machine")
+        predicted_s = body.get("predicted_s")
+        if not isinstance(machine, str) \
+                or not isinstance(predicted_s, (int, float)):
+            return 400, {"error": "body must carry 'machine' and a "
+                                  "numeric 'predicted_s'"}
+        observed = body.get("observed_s")
+        if observed is not None and not isinstance(observed, (int, float)):
+            return 400, {"error": "'observed_s' must be numeric"}
+        try:
+            self.router.complete(machine, predicted_s=float(predicted_s),
+                                 observed_s=(float(observed)
+                                             if observed is not None
+                                             else None))
+        except (KeyError, ValueError) as e:
+            return 404 if isinstance(e, KeyError) else 400, \
+                {"error": str(e).strip("'\""),
+                 "machines": self.router.machines}
+        return 200, {"ok": True,
+                     "outstanding": self.router.outstanding(),
+                     "health": self.router.health.report().get(machine)}
+
     def stats(self) -> Dict[str, Any]:
         eng = self.session.engine
-        return {
+        out = {
             "timings": self.session.timer.calls,
             "eval_calls": self.session.eval_calls,
             "trace_count": self.session.trace_count,
@@ -162,6 +233,9 @@ class PredictionDaemon:
             "batcher": self.batcher.stats(),
             "pool": self.pool.stats(),
         }
+        if self.router is not None:
+            out["fleet"] = self.router.stats()
+        return out
 
     def _handler_class(self):
         daemon = self
@@ -185,6 +259,12 @@ class PredictionDaemon:
                     self._reply(200, {"ok": True})
                 elif self.path == "/stats":
                     self._reply(200, daemon.stats())
+                elif self.path == "/fleet":
+                    if daemon.router is None:
+                        self._reply(503, {"error": "no fleet router "
+                                                   "mounted"})
+                    else:
+                        self._reply(200, daemon.router.stats())
                 else:
                     self._reply(404, {"error": f"no route {self.path}"})
 
@@ -197,7 +277,11 @@ class PredictionDaemon:
                     threading.Thread(target=daemon._server.shutdown,
                                      daemon=True).start()
                     return
-                if self.path != "/predict":
+                handlers = {"/predict": daemon.handle_predict,
+                            "/route": daemon.handle_route,
+                            "/complete": daemon.handle_complete}
+                handler = handlers.get(self.path)
+                if handler is None:
                     self._reply(404, {"error": f"no route {self.path}"})
                     return
                 try:
@@ -209,7 +293,7 @@ class PredictionDaemon:
                     self._reply(400, {"error": f"bad request body: {e}"})
                     return
                 try:
-                    status, payload = daemon.handle_predict(body)
+                    status, payload = handler(body)
                 except Exception as e:  # noqa: BLE001 — typed reply
                     status, payload = 500, {"error": str(e)}
                 self._reply(status, payload)

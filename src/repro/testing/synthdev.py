@@ -25,6 +25,7 @@ profile guarantee holds for synthetic devices too.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Tuple
 
@@ -104,6 +105,25 @@ class SyntheticDevice:
         return TimingStats(median=median, std=self.noise * t,
                            min=t * (1.0 - self.noise))
 
+    def degraded(self, factor: float) -> "SyntheticDevice":
+        """The SAME machine running ``factor``× slower than it did when
+        calibrated (thermal throttling, a sick memory stack): every rate
+        parameter scales by ``factor`` while shape parameters
+        (``p_edge``) and — deliberately — the fingerprint stay put.  An
+        unchanged fingerprint is the point of the exercise: the fleet
+        health layer exists precisely because identity checks cannot see
+        a machine whose behavior drifted.  It also means a measurement
+        cache warmed BEFORE the degradation must not serve a
+        recalibration afterwards — pass ``cache=None`` when closing the
+        loop on a degraded device."""
+        if not factor > 0.0:
+            raise ValueError(f"degradation factor must be positive, "
+                             f"got {factor}")
+        shape_params = {"p_edge"}
+        scaled = {p: (v if p in shape_params else v * factor)
+                  for p, v in self.p_true.items()}
+        return dataclasses.replace(self, p_true=scaled)
+
 
 # ---------------------------------------------------------------------------
 # The default fleet: three machines spanning the balance regimes
@@ -148,3 +168,56 @@ def default_fleet(*, truth: ZooEntry = OVL_FLOP_MEM, noise: float = 0.0,
     return [fleet_device(n, truth=truth, noise=noise,
                          output_feature=output_feature)
             for n in sorted(_FLEET_RATES)]
+
+
+def synthetic_fleet(n: int, *, truth: ZooEntry = OVL_FLOP_MEM,
+                    noise: float = 0.0,
+                    output_feature: str = DEFAULT_OUTPUT_FEATURE
+                    ) -> List[SyntheticDevice]:
+    """A heterogeneous fleet of ``n`` devices for routing scenarios.
+
+    The first three are the named :func:`default_fleet` machines; beyond
+    that, generated machines (``gen3``, ``gen4``, …) take the ``apex``
+    rates scaled per-parameter by deterministic factors in [1/4, 4) —
+    hash-of-identity draws, so fleet ``n`` is always byte-identical and
+    fleet ``n+1`` extends fleet ``n`` without renaming anyone.  The
+    spread keeps every fleet genuinely heterogeneous: no two machines
+    share a rate balance, which is what makes routing decisions
+    non-trivial."""
+    if n < 1:
+        raise ValueError(f"a fleet needs at least one device, got {n}")
+    fleet = default_fleet(truth=truth, noise=noise,
+                          output_feature=output_feature)[:n]
+    base = _FLEET_RATES["apex"]
+    for i in range(len(fleet), n):
+        name = f"gen{i}"
+        rates = {
+            p: base[j] * 4.0 ** _unit_hash("synthetic-fleet", name, p)
+            for j, p in enumerate(("p_madd", "p_mem", "p_launch"))
+        }
+        rates["p_edge"] = _P_EDGE_TRUE
+        params = {p: rates[p]
+                  for p in truth.model(output_feature).param_names
+                  if p in rates}
+        fleet.append(SyntheticDevice(name=name, truth=truth, p_true=params,
+                                     noise=noise,
+                                     output_feature=output_feature))
+    return fleet
+
+
+def exact_profile(device: SyntheticDevice) -> "MachineProfile":
+    """A :class:`~repro.profiles.MachineProfile` whose fit for the
+    device's truth model IS ``p_true`` (residual exactly zero) — the
+    profile a perfect calibration run would produce, minus the run.
+    Routing tests and benchmarks use this to study placement quality in
+    isolation from calibration quality (and to skip the study's cost)."""
+    from repro.core.calibrate import FitResult
+    from repro.profiles.profile import MachineProfile, ModelFit
+
+    model = device.truth_model()
+    fit = FitResult(params=dict(device.p_true), residual_norm=0.0,
+                    iterations=1, converged=True)
+    return MachineProfile(
+        fingerprint=device.fingerprint,
+        fits={device.truth.name: ModelFit.from_fit(model, fit)},
+        trials=1)
