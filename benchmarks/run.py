@@ -26,6 +26,9 @@ Benches (one per paper table/figure):
   fleet   predictive routing — µs per routing decision (zero timings),
           makespan: round-robin vs predicted-makespan vs clairvoyant
           oracle on a heterogeneous synthetic fleet
+  autotune predictor-guided search — pruned (one compiled eval + top-k
+          confirmations) vs exhaustive timing over the 3 §8 variant
+          spaces: wall time, timing passes, winner agreement, speedup
 """
 import sys
 import time
@@ -33,6 +36,7 @@ import time
 
 def main() -> None:
     from benchmarks import paper_figures as pf
+    from benchmarks.autotune_bench import autotune_rows
     from benchmarks.calibration_bench import calibration_rows
     from benchmarks.counting_bench import counting_rows
     from benchmarks.fleet_bench import fleet_rows
@@ -48,6 +52,7 @@ def main() -> None:
         "serve": serve_rows,
         "counting": counting_rows,
         "fleet": fleet_rows,
+        "autotune": autotune_rows,
         "fig1": pf.fig1_matmul_simple,
         "fig2": pf.fig2_madd_component,
         "fig5": pf.fig5_overlap,

@@ -1,15 +1,17 @@
 """Autotuner pruning — the paper's headline use case (§4).
 
-Calibrate the cost model ONCE on generic microbenchmarks, then rank
-mathematically-equivalent program variants *without running them*:
+Calibrate the cost model ONCE on generic microbenchmarks, then let the
+predictor search the §8 variant spaces: the whole space is priced in one
+compiled ``predict_batch`` evaluation, only the pruned top-k survivors
+get confirmation timings (through the measurement cache), and the winner
+is recorded in the profile so a warm re-tune performs zero timings:
 
   * 4 DG differentiation variants (paper §8.4)
   * 2 stencil lowerings (paper §8.5)
-  * matmul tiled-vs-naive at two block sizes (paper §8.3)
+  * matmul tiled-vs-naive over the tile × prefetch lattice (paper §8.3)
 
-Finally measure everything to score the model's ranking quality.
-
-  PYTHONPATH=src python examples/autotune_variants.py
+  PYTHONPATH=src python examples/autotune_variants.py              # real
+  PYTHONPATH=src python examples/autotune_variants.py --synthetic citra
 
 The variant set is also a lint target: importing this module never times
 anything, and ``lint_targets()`` hands the exact variants below to the
@@ -18,55 +20,67 @@ static modelability auditor —
   PYTHONPATH=src python -m repro.lint --no-default \
       examples/autotune_variants.py
 """
+import argparse
 import pathlib
 import sys
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from benchmarks.common import calibrated_base_model
-from repro.core.uipick import ALL_GENERATORS, KernelCollection
-from repro.core.variantselect import Variant, rank_variants, ranking_quality
-
-COLL = KernelCollection(ALL_GENERATORS)
-
-# the three §8 variant sets this example ranks (and repro.lint audits)
-TAG_SETS = [
-    ("DG differentiation (4 variants)",
-     ["dg_diff", "dtype:float32", "nelements_dg:32768"]),
-    ("5-point stencil (2 lowerings)",
-     ["finite_diff", "dtype:float32", "n_grid:4096"]),
-    ("matmul: tiled vs naive",
-     ["matmul_sq", "dtype:float32", "n:768", "tile:64"]),
-]
-
-
-def variants_for(tags):
-    return [Variant(k.name, k.fn, k.make_args)
-            for k in COLL.generate_kernels(tags)]
+from repro.tuning import exhaustive_search, section8_spaces, tune_space
 
 
 def lint_targets():
-    """Every variant this example would rank, as static audit targets
+    """Every variant this example would tune, as static audit targets
     (``repro.lint`` traces them abstractly — nothing is built or run)."""
-    return [v for _title, tags in TAG_SETS for v in variants_for(tags)]
+    return [k for space in section8_spaces() for k in space.kernels]
 
 
-def show(title, tags):
-    model, fit = calibrated_base_model()
-    variants = variants_for(tags)
-    ranked = rank_variants(model, fit, variants, measure=True, trials=6)
-    q = ranking_quality(ranked)
-    print(f"\n== {title} ==")
-    for r in ranked:
-        print(f"  pred {r.predicted_time * 1e3:8.2f} ms   "
-              f"meas {r.measured_time * 1e3:8.2f} ms   {r.name}")
-    print(f"  top-1 correct: {bool(q['top1_correct'])}   "
-          f"pairwise agreement: {q['pairwise_agreement']:.2f}")
+def _open_session(args):
+    from repro.api.session import PerfSession
+    from repro.studies.zoo import STUDY_SMOKE_TAGS
+
+    device = None
+    if args.synthetic:
+        from repro.testing.synthdev import fleet_device
+        device = fleet_device(args.synthetic)
+    return PerfSession.open(device, tags=STUDY_SMOKE_TAGS,
+                            trials=args.trials, cache=args.cache_dir)
 
 
-def main():
-    for title, tags in TAG_SETS:
-        show(title, tags)
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--synthetic", default=None,
+                    help="tune a synthetic ground-truth device "
+                         "(apex/bulk/citra) instead of this machine")
+    ap.add_argument("--trials", type=int, default=6)
+    ap.add_argument("--cache-dir", default=None)
+    ap.add_argument("--exhaustive", action="store_true",
+                    help="also time every variant to show the savings")
+    args = ap.parse_args(argv)
+
+    session = _open_session(args)
+    print(f"calibrated: {session.calibration}")
+    for space in section8_spaces():
+        res = tune_space(session, space, trials=args.trials)
+        c = res.choice
+        print(f"\n== {space.name}: {len(space)} variants, "
+              f"timed {c.n_timed}, "
+              f"{res.timings_performed} timing passes paid ==")
+        for name, pred in sorted(c.predicted.items(), key=lambda kv: kv[1]):
+            meas = (f"   meas {c.measured[name] * 1e3:8.2f} ms"
+                    if name in c.measured else "")
+            print(f"  pred {pred * 1e3:8.2f} ms{meas}   {name}")
+        print(f"  winner: {c.winner}")
+        if args.exhaustive:
+            ex_winner, _ex_meas, ex_timings = exhaustive_search(
+                session, space, trials=args.trials)
+            print(f"  exhaustive: {ex_timings} timing passes for the same "
+                  f"winner check (winner {ex_winner})")
+
+        # warm re-tune: the recorded winner answers without any work
+        warm = tune_space(session, space, trials=args.trials)
+        assert warm.warm and warm.timings_performed == 0
+        print(f"  warm re-tune: pure cache ({warm.winner})")
 
 
 if __name__ == "__main__":

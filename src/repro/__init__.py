@@ -20,6 +20,10 @@ cheap and cycle-free:
 * fleet:      :class:`FleetRouter`, :class:`FleetHealth`,
               :class:`RoutingDecision` (``repro.fleet`` — predictive
               load balancing over machine profiles)
+* tuning:     :func:`tune_space`, :func:`enumerate_space`,
+              :class:`TuningSpace`, :class:`TuneResult`,
+              :class:`TunedChoice` (``repro.tuning`` — predictor-guided
+              autotuning with persisted winners)
 
 Anything not listed here is internal layering: importable, but subject to
 refactoring between releases.
@@ -64,6 +68,12 @@ _EXPORTS = {
     "FleetRouter": "repro.fleet",
     "FleetHealth": "repro.fleet",
     "RoutingDecision": "repro.fleet",
+    # tuning
+    "TuningSpace": "repro.tuning",
+    "TuneResult": "repro.tuning",
+    "TunedChoice": "repro.profiles",
+    "enumerate_space": "repro.tuning",
+    "tune_space": "repro.tuning",
     # studies
     "MODEL_ZOO": "repro.studies",
     "run_study": "repro.studies",

@@ -9,6 +9,6 @@
 * ``workremoval``              — the work-removal jaxpr transformation
 * ``hlo`` / ``roofline``       — trip-count-aware compiled-HLO cost walking
   and the three-term roofline report
-* ``variantselect``            — model-guided variant ranking (the paper's
-  autotuner-pruning use case)
+* ``variantselect``            — deprecated model-guided variant ranking
+  shims; the autotuner-pruning use case now lives in ``repro.tuning``
 """

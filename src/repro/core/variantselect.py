@@ -5,22 +5,26 @@ program variants, predict each variant's execution time from its
 automatically gathered features and rank them — no execution of the
 candidate variants required (paper §4: "an effective pruning strategy").
 
-``select_variant`` is what the framework itself uses to pick execution
-plans (attention lowering, MoE dispatch width, remat policy) from dry-run
-features; examples/autotune_variants.py demonstrates the user-facing flow.
+This module is now a thin compatibility layer over :mod:`repro.tuning`,
+the full search engine (space enumeration, one-compiled-eval pricing,
+top-k pruning, cached confirmation, persisted winners).
+``rank_variants``/``select_variant`` keep working for one release behind
+a :class:`DeprecationWarning`; new code should drive
+:func:`repro.tuning.tune_space` through a :class:`repro.PerfSession`.
+
+There is deliberately no module-level count engine: counting state is
+threaded from the caller (pass ``engine=session.engine`` to reuse a
+session's persistent count store), and a caller that passes nothing gets
+a private engine per call — never a hidden process-wide cache.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.calibrate import FitResult
 from repro.core.countengine import CountEngine
 from repro.core.model import Model
-
-# ranking shares one engine by default so repeated selections over the
-# same variant set hit the in-process count memo instead of re-tracing
-_ENGINE = CountEngine()
 
 
 @dataclass
@@ -41,9 +45,51 @@ class RankedVariant:
 def predict_time(model: Model, params: Mapping[str, float],
                  variant: Variant, *,
                  engine: Optional[CountEngine] = None) -> float:
-    eng = engine if engine is not None else _ENGINE
+    """One variant's predicted seconds (single-row convenience; batch
+    ranking goes through the compiled evaluator in :func:`rank_variants`
+    / :func:`repro.tuning.tune_space`)."""
+    eng = engine if engine is not None else CountEngine()
     counts = eng.counts_of_callable(variant.fn, variant.make_args())
     return float(model.evaluate(params, counts))
+
+
+def _rank(model: Model, params: Mapping[str, float] | FitResult,
+          variants: Sequence[Variant], *,
+          measure: bool, trials: int,
+          engine: Optional[CountEngine],
+          cache=None, timer=None) -> List[RankedVariant]:
+    # lazy: core must not import the api/tuning layers at module scope
+    from repro.api.engine import PredictEngine
+    from repro.core.uipick import MeasurementKernel
+    from repro.profiles.fingerprint import DeviceFingerprint
+    from repro.profiles.profile import MachineProfile, ModelFit
+    from repro.tuning.tuner import confirm_time
+
+    if isinstance(params, FitResult):
+        params = params.params
+    eng = engine if engine is not None else CountEngine()
+    counts_rows = [eng.counts_of_callable(v.fn, v.make_args())
+                   for v in variants]
+    # one compiled batched evaluation over an ad-hoc single-fit profile —
+    # the same pricing path tune_space uses, minus the session
+    profile = MachineProfile(
+        fingerprint=DeviceFingerprint(platform="adhoc",
+                                      device_kind="variantselect",
+                                      n_devices=1),
+        fits={"adhoc": ModelFit.from_fit(model, FitResult(
+            params=dict(params), residual_norm=0.0, iterations=0,
+            converged=True))})
+    preds = PredictEngine(profile).predict_rows(
+        counts_rows, [v.name for v in variants], model="adhoc")
+    out = []
+    for v, pred in zip(variants, preds):
+        meas = None
+        if measure:
+            mk = MeasurementKernel(v.name, v.fn, v.make_args, {})
+            meas, _timed = confirm_time(mk, trials, cache=cache,
+                                        timer=timer, engine=eng)
+        out.append(RankedVariant(v.name, float(pred.seconds), meas))
+    return sorted(out, key=lambda r: r.predicted_time)
 
 
 def rank_variants(
@@ -54,37 +100,52 @@ def rank_variants(
     measure: bool = False,
     trials: int = 10,
     engine: Optional[CountEngine] = None,
+    cache=None,
+    timer=None,
 ) -> List[RankedVariant]:
-    if isinstance(params, FitResult):
-        params = params.params
-    out = []
-    for v in variants:
-        pred = predict_time(model, params, v, engine=engine)
-        meas = None
-        if measure:
-            from repro.core.uipick import MeasurementKernel
-
-            mk = MeasurementKernel(v.name, v.fn, v.make_args, {})
-            meas = mk.time(trials=trials)
-        out.append(RankedVariant(v.name, pred, meas))
-    return sorted(out, key=lambda r: r.predicted_time)
+    """Deprecated: rank ``variants`` by predicted time (one compiled
+    evaluation), optionally confirming each with a measurement routed
+    through ``cache`` (a :class:`~repro.profiles.MeasurementCache`).
+    Prefer :func:`repro.tuning.tune_space`, which also prunes before
+    measuring and records the winner."""
+    from repro.deprecation import warn_once
+    warn_once("variantselect.rank_variants",
+              "rank_variants is deprecated; use repro.tuning.tune_space "
+              "(prices the space in one compiled evaluation, times only "
+              "the pruned top-k, and records the winner in the profile)")
+    return _rank(model, params, variants, measure=measure, trials=trials,
+                 engine=engine, cache=cache, timer=timer)
 
 
 def select_variant(model, params, variants, *,
                    engine: Optional[CountEngine] = None) -> Variant:
-    ranked = rank_variants(model, params, variants, engine=engine)
+    """Deprecated: the predicted-fastest variant, no measurements.
+    Prefer :func:`repro.tuning.tune_space` (which confirms its winner)."""
+    from repro.deprecation import warn_once
+    warn_once("variantselect.select_variant",
+              "select_variant is deprecated; use repro.tuning.tune_space "
+              "and read the recorded TunedChoice winner")
+    ranked = _rank(model, params, variants, measure=False, trials=0,
+                   engine=engine)
     best = ranked[0].name
     return next(v for v in variants if v.name == best)
 
 
 def ranking_quality(ranked: Sequence[RankedVariant]) -> Dict[str, float]:
-    """Did the model rank the measured-fastest variant first?  Also returns
-    Kendall-tau-style pairwise ordering agreement."""
+    """Did the model rank the measured-fastest variant first?  Top-1 is
+    judged among MEASURED entries only (an unmeasured head of the
+    ranking proves nothing), pairwise agreement is Kendall-tau-style
+    over measured pairs, and ``n_measured`` says how much evidence the
+    scores rest on — fewer than two measurements makes both vacuously
+    1.0."""
     with_meas = [r for r in ranked if r.measured_time is not None]
     if len(with_meas) < 2:
-        return {"top1_correct": 1.0, "pairwise_agreement": 1.0}
+        return {"top1_correct": 1.0, "pairwise_agreement": 1.0,
+                "n_measured": float(len(with_meas))}
     best_measured = min(with_meas, key=lambda r: r.measured_time)
-    top1 = 1.0 if ranked[0].name == best_measured.name else 0.0
+    # with_meas preserves ranking order, so its head is the
+    # best-predicted variant that actually has a measurement
+    top1 = 1.0 if with_meas[0].name == best_measured.name else 0.0
     agree = tot = 0
     for i in range(len(with_meas)):
         for j in range(i + 1, len(with_meas)):
@@ -93,4 +154,5 @@ def ranking_quality(ranked: Sequence[RankedVariant]) -> Dict[str, float]:
             meas_order = a.measured_time <= b.measured_time
             agree += int(pred_order == meas_order)
             tot += 1
-    return {"top1_correct": top1, "pairwise_agreement": agree / tot}
+    return {"top1_correct": top1, "pairwise_agreement": agree / tot,
+            "n_measured": float(len(with_meas))}

@@ -22,6 +22,7 @@ from repro.profiles.profile import (
     MachineProfile,
     ModelFit,
     ProfileError,
+    TunedChoice,
     load_profile,
     merge_profiles,
     save_profile,
@@ -37,6 +38,7 @@ __all__ = [
     "ModelFit",
     "PROFILE_SCHEMA_VERSION",
     "ProfileError",
+    "TunedChoice",
     "load_profile",
     "merge_profiles",
     "save_profile",

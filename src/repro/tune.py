@@ -1,0 +1,12 @@
+"""``python -m repro.tune`` — predictor-guided autotuning entry point.
+
+Thin shim over :mod:`repro.tuning.cli`; see that module (or ``--help``)
+for the flag reference.  The search library itself is
+:mod:`repro.tuning`.
+"""
+import sys
+
+from repro.tuning.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,432 @@
+"""Predictor-guided autotuner: space enumeration, one-eval pricing,
+pruning, cached confirmation, persisted winners, and the variantselect
+compatibility shims."""
+import math
+import warnings
+
+import pytest
+
+from repro.api.session import PerfSession
+from repro.core.countengine import CountEngine
+from repro.core.model import Model
+from repro.core.uipick import CountingTimer
+from repro.deprecation import reset_warnings
+from repro.profiles.cache import MeasurementCache
+from repro.profiles.profile import (
+    MachineProfile,
+    ProfileError,
+    TunedChoice,
+    load_profile,
+    merge_profiles,
+    save_profile,
+)
+from repro.testing.synthdev import exact_profile, fleet_device
+from repro.tuning import (
+    SECTION8_SPACE_TAGS,
+    derive_margin,
+    enumerate_space,
+    exhaustive_search,
+    expand_tag_templates,
+    prune_candidates,
+    section8_spaces,
+    true_optimal_set,
+    tune_space,
+)
+
+# a small cheap space for most tests: both stencil lowerings at 1024²
+SMALL_TAGS = ["finite_diff", "dtype:float32", "n_grid:1024",
+              "variant:{roll,slice}"]
+
+
+def small_session(tmp_path, *, cache=True, noise=0.0):
+    """Exact-profile synthetic session: zero calibration cost, known
+    ground truth, injectable timer."""
+    device = fleet_device("citra", noise=noise)
+    profile = exact_profile(device)
+    mcache = MeasurementCache(tmp_path / "cache", device.fingerprint) \
+        if cache else None
+    session = PerfSession.open(profile, cache=mcache, timer=device.timer)
+    return session, device
+
+
+# ---------------------------------------------------------------------------
+# space enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_expand_tag_templates():
+    assert expand_tag_templates(
+        ["matmul_sq", "n:768", "tile:{32,64}"]) \
+        == ["matmul_sq", "n:768", "tile:32,64"]
+    # plain comma grammar passes through untouched
+    assert expand_tag_templates(["tile:32,64"]) == ["tile:32,64"]
+    with pytest.raises(ValueError):
+        expand_tag_templates(["tile:{32,64"])       # unbalanced
+    with pytest.raises(ValueError):
+        expand_tag_templates(["{32,64}"])           # no arg prefix
+    with pytest.raises(ValueError):
+        expand_tag_templates(["tile:{}"])           # empty
+
+
+def test_space_enumeration_deterministic():
+    a = enumerate_space("s", SMALL_TAGS)
+    b = enumerate_space("s", SMALL_TAGS)
+    assert a.variant_names == b.variant_names
+    assert a.signature == b.signature
+    assert len(a) == 2
+    # the signature is content identity: a different space differs
+    other = enumerate_space("s", ["finite_diff", "dtype:float32",
+                                  "n_grid:2048"])
+    assert other.signature != a.signature
+
+
+def test_space_dedups_equivalent_variants():
+    # the non-prefetch matmul ignores `tile`: 4 lattice points, 1 program
+    space = enumerate_space(
+        "m", ["matmul_sq", "dtype:float32", "n:256",
+              "prefetch:{False}", "tile:{16,32,64,128}"])
+    assert len(space) == 1
+    undeduped = enumerate_space(
+        "m", ["matmul_sq", "dtype:float32", "n:256",
+              "prefetch:{False}", "tile:{16,32,64,128}"], dedup=False)
+    assert len(undeduped) == 4
+
+
+def test_empty_space_refused():
+    with pytest.raises(ValueError, match="no variants"):
+        enumerate_space("nope", ["finite_diff", "variant:{bogus}"])
+
+
+# ---------------------------------------------------------------------------
+# pruning
+# ---------------------------------------------------------------------------
+
+
+def test_prune_top_k_and_fraction():
+    preds = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert prune_candidates(preds, top_k=2) == [1, 3]
+    # ceil(0.2 * 5) = 1
+    assert prune_candidates(preds, top_fraction=0.2) == [1]
+    # never fewer than one survivor
+    assert prune_candidates([7.0], top_fraction=0.01) == [0]
+    with pytest.raises(ValueError):
+        prune_candidates(preds, top_fraction=0.0)
+    with pytest.raises(ValueError):
+        prune_candidates(preds, margin=-0.1)
+
+
+def test_prune_margin_keeps_near_ties():
+    # candidate 2 is within 5% of the cut line, candidate 4 is not
+    preds = [1.0, 1.2, 1.23, 2.0]
+    assert prune_candidates(preds, top_k=2, margin=0.0) == [0, 1]
+    assert prune_candidates(preds, top_k=2, margin=0.05) == [0, 1, 2]
+    # margin=0 drops even EXACT ties beyond k (deterministic budget)
+    assert prune_candidates([1.0, 1.0, 1.0], top_k=1, margin=0.0) == [0]
+    assert prune_candidates([1.0, 1.0, 1.0], top_k=1, margin=0.01) \
+        == [0, 1, 2]
+
+
+def test_derive_margin():
+    assert derive_margin(None) == pytest.approx(0.05)
+    assert derive_margin(0.0) == 0.0
+    assert derive_margin(0.01) == pytest.approx(0.02)
+    assert derive_margin(10.0) == pytest.approx(0.5)    # capped
+
+
+# ---------------------------------------------------------------------------
+# the search loop
+# ---------------------------------------------------------------------------
+
+
+def test_cold_search_is_one_compiled_eval(tmp_path):
+    session, _device = small_session(tmp_path)
+    space = enumerate_space("stencil", SMALL_TAGS)
+    assert session.eval_calls == 0
+    res = tune_space(session, space, margin=0.0)
+    assert not res.warm
+    assert session.eval_calls == 1          # the whole space, one eval
+    assert res.choice.n_variants == 2
+    assert res.choice.n_timed == 1
+    assert res.timings_performed == 1
+    assert res.choice.predicted.keys() == set(space.variant_names)
+
+
+def test_synthetic_truth_top1_recovery(tmp_path):
+    """The §8 acceptance loop: on every §8 space the pruned search must
+    find the ground-truth optimum while timing within budget."""
+    session, device = small_session(tmp_path)
+    for space in section8_spaces():
+        res = tune_space(session, space, margin=0.0)
+        budget = max(1, math.ceil(0.2 * len(space)))
+        assert res.choice.n_timed <= budget, space.name
+        assert res.choice.winner in true_optimal_set(device, space), \
+            space.name
+
+
+def test_warm_retune_zero_timings_zero_traces(tmp_path):
+    session, device = small_session(tmp_path)
+    space = enumerate_space("stencil", SMALL_TAGS)
+    tune_space(session, space, margin=0.0)
+    save_profile(session.profile, tmp_path / "prof.json")
+
+    # a FRESH session (fresh engine, fresh timer) over the saved profile:
+    # the recorded winner answers with zero work of any kind
+    timer = CountingTimer(device.timer)
+    warm = PerfSession.open(str(tmp_path / "prof.json"), timer=timer)
+    space2 = enumerate_space("stencil", SMALL_TAGS)
+    res = tune_space(warm, space2)
+    assert res.warm
+    assert res.winner == space2.kernels[0].name \
+        or res.winner in space2.variant_names
+    assert timer.calls == 0
+    assert warm.engine.trace_count == 0
+    assert warm.eval_calls == 0
+    # force=True re-searches despite the record
+    forced = tune_space(warm, space2, margin=0.0, force=True)
+    assert not forced.warm
+    assert warm.eval_calls == 1
+
+
+def test_confirmation_routed_through_cache(tmp_path):
+    """A second cold search of the same space (no recorded winner) pays
+    ZERO timing passes: survivors hit the measurement cache."""
+    session, device = small_session(tmp_path)
+    space = enumerate_space("stencil", SMALL_TAGS)
+    first = tune_space(session, space, margin=0.0)
+    assert first.timings_performed == 1
+    # same cache, fresh profile record
+    profile2 = exact_profile(device)
+    session2 = PerfSession.open(profile2, cache=session.cache,
+                                timer=device.timer)
+    second = tune_space(session2, space, margin=0.0)
+    assert not second.warm
+    assert second.choice.n_timed == 1       # still confirmed a survivor
+    assert second.timings_performed == 0    # ...from the cache
+    assert second.winner == first.winner
+
+
+def test_exhaustive_baseline_times_everything(tmp_path):
+    session, device = small_session(tmp_path, cache=False)
+    space = enumerate_space("stencil", SMALL_TAGS)
+    winner, measured, timings = exhaustive_search(session, space)
+    assert set(measured) == set(space.variant_names)
+    assert timings == len(space)
+    assert winner in true_optimal_set(device, space)
+
+
+def test_noisy_device_margin_widens_confirmation(tmp_path):
+    """With a wide explicit margin, near-ties survive to confirmation
+    and the measured-fastest one wins."""
+    session, _device = small_session(tmp_path, noise=0.05)
+    space = enumerate_space("stencil", SMALL_TAGS)
+    res = tune_space(session, space, top_k=1, margin=1.0)
+    assert res.choice.n_timed == 2          # the tie band kept both
+    assert res.winner == min(res.choice.measured,
+                             key=res.choice.measured.get)
+
+
+# ---------------------------------------------------------------------------
+# TunedChoice persistence
+# ---------------------------------------------------------------------------
+
+
+def test_tuned_choice_profile_roundtrip(tmp_path):
+    session, _device = small_session(tmp_path)
+    space = enumerate_space("stencil", SMALL_TAGS)
+    res = tune_space(session, space, margin=0.0)
+    path = save_profile(session.profile, tmp_path / "prof.json")
+    loaded = load_profile(path)
+    assert set(loaded.tuning) == {space.signature}
+    assert loaded.tuning[space.signature].to_dict() \
+        == res.choice.to_dict()
+    # a profile without tuning still loads (and serializes without the key)
+    bare = exact_profile(fleet_device("apex"))
+    assert "tuning" not in bare.to_dict()
+    assert load_profile(save_profile(bare, tmp_path / "bare.json")).tuning \
+        == {}
+
+
+def test_merge_profiles_carries_tuning(tmp_path):
+    device = fleet_device("citra")
+    a, b = exact_profile(device), exact_profile(device)
+    space = enumerate_space("stencil", SMALL_TAGS)
+    sa = PerfSession.open(a, timer=device.timer)
+    tune_space(sa, space, margin=0.0)
+    merged = merge_profiles([a, b])
+    assert set(merged.tuning) == {space.signature}
+    # conflicting winners for the same space refuse to merge
+    conflict = TunedChoice.from_dict(a.tuning[space.signature].to_dict())
+    conflict.winner = "someone_else"
+    b.tuning[space.signature] = conflict
+    with pytest.raises(ProfileError, match="conflicting tuned choice"):
+        merge_profiles([a, b])
+
+
+def test_warm_lookup_respects_model_name(tmp_path):
+    """A winner recorded under one fit must not answer a search that
+    prices with a different fit."""
+    session, device = small_session(tmp_path)
+    space = enumerate_space("stencil", SMALL_TAGS)
+    tune_space(session, space, margin=0.0)
+    choice = session.profile.tuning[space.signature]
+    assert choice.model == "ovl_flop_mem"
+    stale = TunedChoice.from_dict(choice.to_dict())
+    stale.model = "some_other_fit"
+    session.profile.tuning[space.signature] = stale
+    res = tune_space(session, space, margin=0.0)
+    assert not res.warm                     # model mismatch → re-search
+
+
+# ---------------------------------------------------------------------------
+# variantselect compatibility layer
+# ---------------------------------------------------------------------------
+
+
+def _variants():
+    from repro.core.variantselect import Variant
+
+    space = enumerate_space("stencil", SMALL_TAGS)
+    return [Variant(k.name, k.fn, k.make_args) for k in space.kernels]
+
+
+def _fit_for(device):
+    from repro.core.calibrate import FitResult
+
+    model = device.truth_model()
+    return model, FitResult(params=dict(device.p_true), residual_norm=0.0,
+                            iterations=1, converged=True)
+
+
+def test_rank_variants_shim_warns_once_and_ranks():
+    from repro.core import variantselect as vs
+
+    assert not hasattr(vs, "_ENGINE")       # the module global is gone
+    device = fleet_device("citra")
+    model, fit = _fit_for(device)
+    reset_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ranked = vs.rank_variants(model, fit, _variants())
+        vs.rank_variants(model, fit, _variants())
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1                   # once per process, not per call
+    assert [r.predicted_time for r in ranked] \
+        == sorted(r.predicted_time for r in ranked)
+    assert all(r.measured_time is None for r in ranked)
+    reset_warnings()
+
+
+def test_select_variant_shim_warns_once():
+    from repro.core import variantselect as vs
+
+    device = fleet_device("citra")
+    model, fit = _fit_for(device)
+    reset_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        best = vs.select_variant(model, fit.params, _variants())
+        vs.select_variant(model, fit.params, _variants())
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1
+    assert best.name in true_optimal_set(
+        device, enumerate_space("stencil", SMALL_TAGS))
+    reset_warnings()
+
+
+def test_rank_variants_measure_through_cache(tmp_path):
+    """measure=True confirmation timings route through the measurement
+    cache: a second call with the same cache pays zero timing passes."""
+    from repro.core import variantselect as vs
+
+    device = fleet_device("citra")
+    model, fit = _fit_for(device)
+    cache = MeasurementCache(tmp_path / "cache", device.fingerprint)
+    timer = CountingTimer(device.timer)
+    reset_warnings()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ranked = vs.rank_variants(model, fit, _variants(), measure=True,
+                                  trials=3, cache=cache, timer=timer)
+        assert timer.calls == len(ranked)
+        again = vs.rank_variants(model, fit, _variants(), measure=True,
+                                 trials=3, cache=cache, timer=timer)
+    assert timer.calls == len(ranked)       # all hits the second time
+    assert all(r.measured_time is not None for r in again)
+    reset_warnings()
+
+
+def test_ranking_quality_measured_only_top1():
+    from repro.core.variantselect import RankedVariant, ranking_quality
+
+    # the predicted-best entry is UNMEASURED: top-1 must be judged among
+    # measured entries (the old code compared ranked[0] regardless)
+    ranked = [
+        RankedVariant("a", 1.0, None),
+        RankedVariant("b", 2.0, 5.0),
+        RankedVariant("c", 3.0, 4.0),
+    ]
+    q = ranking_quality(ranked)
+    assert q["n_measured"] == 2.0
+    assert q["top1_correct"] == 0.0         # b predicted-best, c fastest
+    assert q["pairwise_agreement"] == 0.0
+    good = ranking_quality([
+        RankedVariant("a", 1.0, None),
+        RankedVariant("b", 2.0, 4.0),
+        RankedVariant("c", 3.0, 5.0),
+    ])
+    assert good["top1_correct"] == 1.0
+    assert good["pairwise_agreement"] == 1.0
+    vacuous = ranking_quality([RankedVariant("a", 1.0, 2.0)])
+    assert vacuous == {"top1_correct": 1.0, "pairwise_agreement": 1.0,
+                       "n_measured": 1.0}
+
+
+def test_predict_time_threads_engine():
+    from repro.core.variantselect import predict_time
+
+    device = fleet_device("citra")
+    model, fit = _fit_for(device)
+    (v,) = _variants()[:1]
+    engine = CountEngine()
+    t1 = predict_time(model, fit.params, v, engine=engine)
+    assert engine.trace_count >= 1
+    traces = engine.trace_count
+    t2 = predict_time(model, fit.params, v, engine=engine)
+    assert engine.trace_count == traces     # memo hit, no re-trace
+    assert t1 == pytest.approx(t2)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_search_report_roundtrip(tmp_path, capsys):
+    from repro.tuning.cli import main
+
+    prof = tmp_path / "prof.json"
+    cache = tmp_path / "cache"
+    base = ["search", "--synthetic", "citra", "--smoke", "--trials", "2",
+            "--cache-dir", str(cache), "--profile", str(prof),
+            "--space", "stencil", "--margin", "0"]
+    assert main(base + ["--save", "--verify-optimum",
+                        "--max-timed-fraction", "0.2",
+                        "--json", str(tmp_path / "out.json")]) == 0
+    assert prof.exists()
+    # warm rerun: pure cache, exit-coded
+    assert main(base + ["--expect-zero-timings"]) == 0
+    assert main(["report", str(prof)]) == 0
+    out = capsys.readouterr().out
+    assert "stencil" in out and "winner" in out
+
+
+def test_cli_unknown_space():
+    from repro.tuning.cli import main
+
+    with pytest.raises(SystemExit):
+        main(["search", "--synthetic", "citra", "--space", "bogus"])
+
+
+def test_section8_space_tags_cover_the_paper_sets():
+    names = [n for n, _ in SECTION8_SPACE_TAGS]
+    assert names == ["dg_diff", "stencil", "matmul"]
